@@ -1,0 +1,51 @@
+"""Beyond-paper: auto slice granularity vs the paper's fixed g=4.
+
+The paper (§4.3) fixes g=4 and names per-operator granularity tuning
+as future work. `auto_granularity` picks per-op g from the cost model
+(alpha latency vs gathered-slice bytes at a ring-rate shadow price).
+This bench compares feasibility/throughput across the Table-1 families
+and the assigned architectures.
+"""
+from __future__ import annotations
+
+from benchmarks.fig5_end_to_end import _descriptions
+from benchmarks.paper_models import MESH_8GPU, RTX_TITAN_8, paper_shape
+from repro.configs import (DeviceInfo, SINGLE_POD_MESH, OSDPConfig,
+                           get_arch, get_shape)
+from repro.core.cost_model import CostEnv
+from repro.core.descriptions import describe
+from repro.core.search import auto_granularity, schedule, search_plan
+
+
+def main(out=print):
+    shape = paper_shape(8)
+    env = CostEnv(RTX_TITAN_8, MESH_8GPU, checkpointing=False)
+    out("case,fixed_g4_tput,auto_g_tput,delta_pct")
+    cands = (8, 16, 32, 64, 128, 256)
+    for mem in (8,):
+        lim = mem * 2**30
+        for family, name, desc in _descriptions(shape):
+            fixed = schedule(desc, env, OSDPConfig(
+                memory_limit_bytes=lim, operator_splitting=True,
+                default_slice_granularity=4,
+                allow_pod_hierarchical=False), batch_candidates=cands)
+            auto = schedule(desc, env, OSDPConfig(
+                memory_limit_bytes=lim, operator_splitting=True,
+                auto_granularity=True,
+                allow_pod_hierarchical=False), batch_candidates=cands)
+            t0 = fixed.cost.throughput if fixed.feasible else 0.0
+            t1 = auto.cost.throughput if auto.feasible else 0.0
+            d = (t1 / t0 - 1) * 100 if t0 else (float("inf") if t1 else 0.0)
+            out(f"{family}/{name},{t0:.0f},{t1:.0f},{d:.1f}")
+    # per-op chosen granularities on the biggest assigned arch
+    desc = describe(get_arch("llama3-405b"), get_shape("train_4k"))
+    env2 = CostEnv(DeviceInfo(), SINGLE_POD_MESH)
+    osdp = OSDPConfig(operator_splitting=True, auto_granularity=True)
+    out("# llama3-405b auto granularities (op: g)")
+    for op in desc.decidable():
+        if op.splittable:
+            out(f"#   {op.name}: g={auto_granularity(op, env2, osdp)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Fig. 8 — OSDP throughput with vs without operator splitting.
+
+Same families as Fig. 5 under 8G/16G; reports the fraction of
+operators the plan actually split (paper: ~25% N&D, 100% W&S, ~50%
+I&C) and the throughput delta (paper: +3%..+92%).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from benchmarks.fig5_end_to_end import _descriptions
+from benchmarks.paper_models import MESH_8GPU, RTX_TITAN_8, paper_shape
+from repro.configs.base import OSDPConfig
+from repro.core.cost_model import CostEnv
+from repro.core.search import schedule
+
+
+def main(out=print) -> List[dict]:
+    shape = paper_shape(8)
+    env = CostEnv(RTX_TITAN_8, MESH_8GPU, checkpointing=False)
+    out("family,model,mem_gib,no_split,with_split,delta_pct,frac_split_ops")
+    rows = []
+    for mem in (8, 16):
+        lim = mem * 2**30
+        for family, name, desc in _descriptions(shape):
+            base = schedule(desc, env, OSDPConfig(
+                memory_limit_bytes=lim, operator_splitting=False,
+                allow_pod_hierarchical=False), batch_candidates=(8, 16, 32, 64, 128, 256))
+            split = schedule(desc, env, OSDPConfig(
+                memory_limit_bytes=lim, operator_splitting=True,
+                default_slice_granularity=4,
+                allow_pod_hierarchical=False), batch_candidates=(8, 16, 32, 64, 128, 256))
+            t0 = base.cost.throughput if base.feasible else 0.0
+            t1 = max(split.cost.throughput if split.feasible else 0.0, t0)
+            n_split = sum(1 for d in split.decisions.values()
+                          if d.split > 1 and d.uniform() is None)
+            n_dec = max(1, sum(1 for d in split.decisions.values()))
+            delta = (t1 / t0 - 1) * 100 if t0 else float("inf")
+            out(f"{family},{name},{mem},{t0:.0f},{t1:.0f},{delta:.1f},"
+                f"{n_split / n_dec:.2f}")
+            rows.append({"family": family, "model": name, "mem": mem,
+                         "no_split": t0, "with_split": t1})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

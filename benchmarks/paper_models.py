@@ -1,0 +1,120 @@
+"""The paper's experimental models (Table 1) + hardware environments.
+
+Three minGPT-style families:
+  N&D  narrow & deep   — 48–96 layers, hidden 1024–1536  (GPT-2/BERT/T5)
+  W&S  wide & shallow  — 2–4 layers, hidden 6144–12288   (GPT-3-like)
+  I&C  inconsistent    — 24–96 layers, mixed hidden      (Swin-like)
+
+I&C layers vary per-layer, which ModelConfig (homogeneous) cannot
+express — those are built directly as per-layer ModelDescriptions,
+which is all the cost model and search engine need.
+
+Hardware environments mirror §4.1: one server with 8 RTX TITAN over
+PCIe3 (Fig. 5) and two A100 servers linked at 100 Gb (Fig. 6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from repro.configs.base import (DENSE, DeviceInfo, MeshConfig, ModelConfig,
+                                ShapeConfig)
+from repro.core.descriptions import (ACT_BYTES, ModelDescription,
+                                     OperatorDesc, describe)
+
+# --- hardware (the paper's DI) ------------------------------------------------
+
+RTX_TITAN_8 = DeviceInfo(
+    name="8x-rtx-titan-pcie3",
+    peak_flops=65e12,          # fp16 tensor-core, realistic sustained
+    hbm_bytes=24 * 2**30,
+    hbm_bw=672e9,
+    ici_bw=12e9,               # PCIe 3.0 x16
+    dci_bw=12e9,
+    alpha=5e-6,
+    mxu_efficiency=0.45,
+)
+
+A100_2SERVER = DeviceInfo(
+    name="2x8-a100-100gb",
+    peak_flops=312e12,
+    hbm_bytes=40 * 2**30,
+    hbm_bw=1555e9,
+    ici_bw=300e9,              # NVLink within server
+    dci_bw=12.5e9,             # 100 Gb between servers
+    alpha=5e-6,
+    mxu_efficiency=0.45,
+)
+
+MESH_8GPU = MeshConfig((8, 1), ("data", "model"))
+MESH_2SERVER = MeshConfig((2, 8, 1), ("pod", "data", "model"))
+
+
+def paper_shape(batch: int, seq: int = 1024) -> ShapeConfig:
+    return ShapeConfig(f"paper_b{batch}", seq, batch, "train")
+
+
+def _gpt(name: str, layers: int, hidden: int) -> ModelConfig:
+    heads = max(8, hidden // 64)
+    return ModelConfig(
+        name=name, family=DENSE, n_layers=layers, d_model=hidden,
+        n_heads=heads, n_kv_heads=heads, d_ff=4 * hidden,
+        vocab_size=50257, act="gelu", norm="layernorm", rope="none",
+        tie_embeddings=True, source="[minGPT]",
+    )
+
+
+# Table 1 rows (several configs per family)
+ND_MODELS: List[ModelConfig] = [
+    _gpt("nd-48x1024", 48, 1024),    # 1.3B-ish
+    _gpt("nd-64x1280", 64, 1280),
+    _gpt("nd-96x1536", 96, 1536),    # 2.9B-ish
+]
+WS_MODELS: List[ModelConfig] = [
+    _gpt("ws-2x6144", 2, 6144),
+    _gpt("ws-3x8192", 3, 8192),
+    _gpt("ws-4x12288", 4, 12288),    # 4B-ish
+]
+
+# I&C: per-layer inconsistent hidden sizes (Swin-style stages)
+IC_SPECS: List[Tuple[str, List[int]]] = [
+    ("ic-24", [1024] * 8 + [2048] * 8 + [4096] * 8),
+    ("ic-48", [1024] * 16 + [2048] * 16 + [3072] * 16),
+    ("ic-96", [1024] * 48 + [1536] * 32 + [4096] * 16),
+]
+
+
+def ic_description(name: str, hiddens: List[int],
+                   shape: ShapeConfig) -> ModelDescription:
+    """Per-layer op list with varying hidden sizes (I&C family)."""
+    V = 50304
+    ops: List[OperatorDesc] = []
+    d0 = hiddens[0]
+    ops.append(OperatorDesc("embed.tok", V * d0, 0.0, d0 * ACT_BYTES))
+    for i, d in enumerate(hiddens):
+        qkv = 3 * d * d
+        ops.append(OperatorDesc(f"layer{i}.attn_qkv", qkv, 2.0 * qkv,
+                                3 * d * ACT_BYTES, splittable=True))
+        ops.append(OperatorDesc(f"layer{i}.attn_out", d * d, 2.0 * d * d,
+                                d * ACT_BYTES, splittable=True))
+        ops.append(OperatorDesc(f"layer{i}.ffn_w1", 4 * d * d, 8.0 * d * d,
+                                4 * d * ACT_BYTES, splittable=True))
+        ops.append(OperatorDesc(f"layer{i}.ffn_w2", 4 * d * d, 8.0 * d * d,
+                                d * ACT_BYTES, splittable=True))
+        ops.append(OperatorDesc(f"layer{i}.norms", 4 * d, 0.0, 0.0,
+                                decidable=False))
+    resident = sum(hiddens) * ACT_BYTES + d0 * ACT_BYTES
+    cfg = _gpt(name, len(hiddens), max(hiddens))
+    return ModelDescription(cfg, shape, ops, resident)
+
+
+def nd_ws_description(cfg: ModelConfig, shape: ShapeConfig,
+                      per_layer: bool = True) -> ModelDescription:
+    return describe(cfg, shape, per_layer=per_layer)
+
+
+ALL_FAMILIES: Dict[str, list] = {
+    "N&D": ND_MODELS,
+    "W&S": WS_MODELS,
+    "I&C": IC_SPECS,
+}

@@ -1,0 +1,71 @@
+"""§Roofline — the 3-term table from the dry-run records.
+
+Reads dryrun_records.json (produced by `python -m repro.launch.dryrun
+--all --both-meshes --out dryrun_records.json`) and prints, per
+(arch x shape) on the single-pod mesh: compute / memory / collective
+seconds, the dominant term, MODEL_FLOPS/HLO_FLOPs, and a one-line
+what-would-move-it note.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Optional
+
+from repro.configs.base import DeviceInfo
+from repro.roofline.analysis import analytic_roofline, roofline
+
+NOTES = {
+    "compute": "raise MXU utilization: larger per-device batch or fuse "
+               "small ops",
+    "memory": "cut HBO traffic: better fusion/remat policy, bf16 "
+              "master-weights offload",
+    "collective": "reduce gathered bytes: move ops ZDP->DP/ZDP_POD where "
+                  "memory allows, overlap collectives with compute",
+}
+
+
+def main(out=print, path: Optional[str] = None) -> List[dict]:
+    path = path or os.environ.get("DRYRUN_RECORDS", "dryrun_records.json")
+    if not os.path.exists(path):
+        out(f"# {path} not found — run the dry-run first; skipping")
+        return []
+    with open(path) as f:
+        records = json.load(f)
+    dev = DeviceInfo()
+    out("# raw_* terms parse compiled HLO (scan bodies counted ONCE by "
+        "XLA cost analysis — undercounts deep stacks); ana_* terms are "
+        "scan-aware cost-model values used for dominance. hbm = "
+        "memory_analysis args+temps (correct either way).")
+    out("arch,shape,mesh,raw_compute_s,raw_memory_s,raw_collective_s,"
+        "ana_compute_s,ana_memory_s,ana_collective_s,dominant,"
+        "hbm_gib_per_dev")
+    rows = []
+    for rec in records:
+        if rec["mesh"] != "16x16":
+            continue
+        t = roofline(rec, dev)
+        ana = analytic_roofline(rec, dev)
+        mem = rec.get("memory_analysis", {})
+        hbm = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)) / 2**30
+        dominant = max(ana, key=ana.get).replace("_s", "")
+        out(f"{rec['arch']},{rec['shape']},{rec['mesh']},"
+            f"{t.compute_s:.4f},{t.memory_s:.4f},{t.collective_s:.4f},"
+            f"{ana['compute_s']:.4f},{ana['memory_s']:.4f},"
+            f"{ana['collective_s']:.4f},{dominant},{hbm:.2f}")
+        rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                     "terms": t, "ana": ana, "dominant": dominant,
+                     "hbm_gib": hbm})
+    if rows:
+        worst = max(rows, key=lambda r: r["hbm_gib"])
+        coll = max(rows, key=lambda r: r["ana"]["collective_s"]
+                   / max(1e-12, r["ana"]["compute_s"]))
+        out(f"# worst memory pressure: {worst['arch']} x {worst['shape']}"
+            f" ({worst['hbm_gib']:.0f} GiB/dev)")
+        out(f"# most collective-bound: {coll['arch']} x {coll['shape']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

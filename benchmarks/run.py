@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  table1   model-family statistics (paper Table 1 + assigned archs)
+  fig5/6   end-to-end throughput: DP / FSDP / OSDP(-base/+hier)
+  fig7     operator splitting: per-op memory & time vs granularity
+  fig8     OSDP with vs without splitting
+  fig9     checkpointing interaction (OSDP vs FSDP under remat)
+  search   search-engine timing (paper: 9–307 s)
+  roofline §Roofline table from dry-run records (if present)
+
+`python -m benchmarks.run [section ...]` — no args runs everything.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    args = (argv if argv is not None else sys.argv[1:]) or [
+        "table1", "fig5", "hybrid3d", "fig7", "fig8", "fig9", "search",
+        "auto_g", "roofline"]
+    from benchmarks import (auto_granularity, fig5_end_to_end,
+                            fig7_operator_splitting,
+                            fig8_splitting_throughput, fig9_checkpointing,
+                            hybrid_3d, roofline_report, search_time,
+                            table1_models)
+    sections = {
+        "table1": table1_models.main,
+        "fig5": fig5_end_to_end.main,     # includes fig6
+        "hybrid3d": hybrid_3d.main,       # Fig.5/6 PP/TP/3D/3D+OSDP rows
+        "fig7": fig7_operator_splitting.main,
+        "fig8": fig8_splitting_throughput.main,
+        "fig9": fig9_checkpointing.main,
+        "search": search_time.main,
+        "auto_g": auto_granularity.main,  # beyond-paper (§4.3 future work)
+        "roofline": roofline_report.main,
+    }
+    for name in args:
+        fn = sections.get(name)
+        if fn is None:
+            print(f"# unknown section {name!r}; known: {sorted(sections)}")
+            continue
+        print(f"\n===== {name} =====")
+        t0 = time.perf_counter()
+        fn()
+        print(f"# [{name}] done in {time.perf_counter() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Table 1 — model-family statistics (layers, operators, hidden,
+params) for the paper families + the 10 assigned architectures."""
+from __future__ import annotations
+
+from benchmarks.paper_models import (IC_SPECS, ND_MODELS, WS_MODELS,
+                                     ic_description, nd_ws_description,
+                                     paper_shape)
+from repro.configs import ARCHS, get_shape
+from repro.core.descriptions import describe
+
+
+def main(out=print):
+    shape = paper_shape(8)
+    out("family,model,layers,operators,hidden,params_B")
+    for fam, cfgs in (("N&D", ND_MODELS), ("W&S", WS_MODELS)):
+        for cfg in cfgs:
+            desc = nd_ws_description(cfg, shape)
+            out(f"{fam},{cfg.name},{cfg.n_layers},{desc.n_operators},"
+                f"{cfg.d_model},{cfg.param_count() / 1e9:.2f}")
+    for name, hiddens in IC_SPECS:
+        desc = ic_description(name, hiddens, shape)
+        out(f"I&C,{name},{len(hiddens)},{desc.n_operators},"
+            f"{min(hiddens)}-{max(hiddens)},"
+            f"{desc.total_params / 1e9:.2f}")
+    out("# assigned architectures")
+    for name, cfg in sorted(ARCHS.items()):
+        desc = describe(cfg, get_shape("train_4k"))
+        out(f"{cfg.family},{name},{cfg.n_layers},{desc.n_operators},"
+            f"{cfg.d_model},{cfg.param_count() / 1e9:.2f}")
+
+
+if __name__ == "__main__":
+    main()

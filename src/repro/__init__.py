@@ -1,0 +1,6 @@
+"""OSDP: Optimal Sharded Data Parallel — JAX/TPU reproduction.
+
+Paper: Jiang, Fu, Miao, Nie, Cui — IJCAI 2023 (10.24963/IJCAI.2023/238).
+See README.md / DESIGN.md / EXPERIMENTS.md.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,108 @@
+"""Sharded checkpointing without external deps.
+
+Layout: <dir>/step_<N>/
+    manifest.json              — tree structure, shapes, dtypes, step
+    <escaped-leaf-path>.npy    — one file per leaf (params + optimizer)
+
+Arrays are fetched via `jax.device_get` (gathers sharded arrays to
+host) and restored with `device_put` against the target shardings —
+correct for CPU/dev runs; a production deployment would swap the
+.npy store for a per-shard object store using the same manifest.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _esc(path: str) -> str:
+    return re.sub(r"[^A-Za-z0-9_.@-]", "__", path)
+
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}/{k}" if prefix else k))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}/{i}"))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree: Any) -> str:
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    flat = _flatten(tree)
+    manifest = {"step": step, "leaves": {}}
+    for path, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        fn = _esc(path) + ".npy"
+        dtype = str(arr.dtype)
+        if dtype == "bfloat16":       # numpy can't round-trip ml_dtypes
+            np.save(os.path.join(d, fn), arr.view(np.uint16))
+        else:
+            np.save(os.path.join(d, fn), arr)
+        manifest["leaves"][path] = {
+            "file": fn, "shape": list(arr.shape), "dtype": dtype}
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return d
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(n.split("_")[1]) for n in os.listdir(ckpt_dir)
+             if n.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
+            shardings: Optional[Any] = None) -> Tuple[Any, int]:
+    """Restore into the structure of `like` (a pytree of arrays or
+    ShapeDtypeStructs). If `shardings` is given (same structure), leaves
+    are device_put with those shardings."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_like = _flatten(like)
+    flat_sh = _flatten(shardings) if shardings is not None else {}
+    out: Dict[str, Any] = {}
+    for path, leaf in flat_like.items():
+        meta = manifest["leaves"][path]
+        arr = np.load(os.path.join(d, meta["file"]))
+        if meta["dtype"] == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        assert list(arr.shape) == list(leaf.shape), (path, arr.shape,
+                                                     leaf.shape)
+        if path in flat_sh and flat_sh[path] is not None:
+            out[path] = jax.device_put(arr, flat_sh[path])
+        else:
+            out[path] = jax.device_put(arr)
+    return _unflatten(out, like), step
+
+
+def _unflatten(flat: Dict[str, Any], like: Any, prefix: str = "") -> Any:
+    if isinstance(like, dict):
+        return {k: _unflatten(flat, like[k],
+                              f"{prefix}/{k}" if prefix else k)
+                for k in like}
+    if isinstance(like, (list, tuple)):
+        vals = [_unflatten(flat, v, f"{prefix}/{i}")
+                for i, v in enumerate(like)]
+        return type(like)(vals) if not hasattr(like, "_fields") \
+            else type(like)(*vals)
+    return flat[prefix]

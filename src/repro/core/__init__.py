@@ -1,0 +1,11 @@
+"""OSDP core: the paper's contribution as a composable JAX module."""
+from repro.core.api import dp_baseline, fsdp_baseline, osdp  # noqa: F401
+from repro.core.cost_model import (  # noqa: F401
+    DP, ZDP, ZDP_POD, CostEnv, Decision, OpCost, PlanCost, op_cost,
+    plan_cost, uniform_plan, zdp_extra_time, zdp_saving)
+from repro.core.descriptions import (  # noqa: F401
+    ModelDescription, OperatorDesc, describe, sanity_check)
+from repro.core.operator_split import chunked_ffn, chunked_matmul  # noqa: F401
+from repro.core.plan import Plan, make_plan  # noqa: F401
+from repro.core.search import (  # noqa: F401
+    SearchResult, schedule, search_plan)

@@ -1,0 +1,57 @@
+"""User-facing OSDP API — the paper's Figure 3 one-call wrap.
+
+FairScale:    model = FSDP(model)
+OSDP (paper): model = OSDP(model, device_information)
+Here:         plan  = osdp(model_cfg, shape, mesh, memory_limit=...)
+
+returning a `Plan` whose decisions drive parameter shardings; models
+built through `repro.models.registry.build_model(run, plan)` execute
+it. `force_mode="ZDP"` reproduces plain FSDP, `force_mode="DP"` plain
+data parallelism — the baselines the paper compares against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.configs.base import (DeviceInfo, MeshConfig, ModelConfig,
+                                OSDPConfig, RunConfig, ShapeConfig,
+                                SINGLE_POD_MESH)
+from repro.core.plan import Plan, make_plan
+
+
+def osdp(model: ModelConfig,
+         shape: ShapeConfig,
+         mesh: MeshConfig = SINGLE_POD_MESH,
+         *,
+         memory_limit_gib: float = 16.0,
+         device: Optional[DeviceInfo] = None,
+         search: str = "dfs",
+         operator_splitting: bool = True,
+         slice_granularity: int = 4,
+         checkpointing: bool = True,
+         force_mode: Optional[str] = None) -> Plan:
+    """Search the optimal sharded-data-parallel plan (paper Alg. 1)."""
+    cfg = OSDPConfig(
+        enabled=True,
+        memory_limit_bytes=memory_limit_gib * 2**30,
+        search=search,
+        operator_splitting=operator_splitting,
+        default_slice_granularity=slice_granularity,
+        checkpointing=checkpointing,
+        force_mode=force_mode,
+    )
+    run = RunConfig(model=model, shape=shape, mesh=mesh, osdp=cfg)
+    return make_plan(run, device)
+
+
+def fsdp_baseline(model: ModelConfig, shape: ShapeConfig,
+                  mesh: MeshConfig = SINGLE_POD_MESH, **kw) -> Plan:
+    """All-ZDP: the FairScale/DeepSpeed ZeRO-3 baseline."""
+    return osdp(model, shape, mesh, force_mode="ZDP", **kw)
+
+
+def dp_baseline(model: ModelConfig, shape: ShapeConfig,
+                mesh: MeshConfig = SINGLE_POD_MESH, **kw) -> Plan:
+    """All-DP: the PyTorch-DDP baseline."""
+    return osdp(model, shape, mesh, force_mode="DP", **kw)

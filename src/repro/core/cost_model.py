@@ -1,0 +1,259 @@
+"""OSDP cost model — the paper's §3.1 Profiler, on TPU constants.
+
+Memory:
+    M_i(p_i, b) = M_model_i / (1 or N_shard) + b * M_act_i + M_extra_i
+
+Time ((alpha, beta, gamma) model, ring collectives):
+    T_i(p_i, b) = k (N-1)(alpha + S_i beta / N) + b * gamma_i
+with k = 2 for DP (all-reduce = reduce-scatter + all-gather) and
+k = 3 for ZDP (two all-gathers + one reduce-scatter); +1 for ZDP when
+activation checkpointing forces a third parameter gather before the
+recompute pass (§4.3).
+
+Beyond-paper additions, all flagged explicitly:
+  * ZDP_POD — hierarchical sharding across only the in-pod `data` axis:
+    memory /N_pod-local, collectives stay on fast ICI.
+  * per-mode gathered-weight peak (M_extra): in ZDP the un-sharded
+    weight must transiently exist; operator splitting divides it by g.
+  * MoE awareness: expert FLOPs scale with top-k, not E.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import DeviceInfo, MeshConfig
+from repro.core.descriptions import (ACT_BYTES, BYTES_PER_PARAM,
+                                     ModelDescription, OperatorDesc,
+                                     STATE_BYTES_PER_PARAM)
+
+# parallel modes -------------------------------------------------------------
+DP = "DP"
+ZDP = "ZDP"
+ZDP_POD = "ZDP_POD"      # beyond-paper hierarchical mode
+MODES = (DP, ZDP, ZDP_POD)
+
+
+@dataclass(frozen=True)
+class Decision:
+    """Plan entry for one operator: per-slice modes.
+
+    `modes` has length 1 for unsplit operators, length g for split ones
+    (paper §3.3: each slice is independently DP or ZDP).
+    """
+
+    op: str
+    modes: Tuple[str, ...]
+
+    @property
+    def split(self) -> int:
+        return len(self.modes)
+
+    def uniform(self) -> Optional[str]:
+        return self.modes[0] if len(set(self.modes)) == 1 else None
+
+
+@dataclass(frozen=True)
+class CostEnv:
+    """Everything the Profiler needs besides the plan."""
+
+    device: DeviceInfo
+    mesh: MeshConfig
+    checkpointing: bool = True
+    # TP already divides each operator's params across the model axis;
+    # OSDP decides the data-axis story for the per-TP-shard residue.
+    include_tp: bool = True
+    # training = fwd + bwd (2x fwd) compute; False for serving estimates
+    train: bool = True
+
+    @property
+    def n_data(self) -> int:
+        return self.mesh.data_parallel          # pod x data ways
+
+    @property
+    def n_data_local(self) -> int:
+        for s, a in zip(self.mesh.shape, self.mesh.axes):
+            if a == "data":
+                return s
+        return 1
+
+    @property
+    def n_tp(self) -> int:
+        return self.mesh.model_parallel if self.include_tp else 1
+
+
+def shard_ways(mode: str, env: CostEnv) -> int:
+    if mode == DP:
+        return 1
+    if mode == ZDP:
+        return env.n_data
+    if mode == ZDP_POD:
+        return env.n_data_local
+    raise ValueError(mode)
+
+
+def _ring_time(bytes_total: float, n: int, alpha: float, bw: float) -> float:
+    """One ring all-gather / reduce-scatter over n ranks."""
+    if n <= 1:
+        return 0.0
+    return (n - 1) * (alpha + bytes_total / n / bw)
+
+
+@dataclass
+class OpCost:
+    memory: float          # steady per-device bytes for this op's states
+    peak_extra: float      # transient gathered-weight bytes
+    time: float            # seconds per step (comm + compute)
+    comm_time: float
+    compute_time: float
+
+
+def op_cost(op: OperatorDesc, decision: Decision, batch_per_device: int,
+            seq_len: int, env: CostEnv) -> OpCost:
+    """Cost of one operator under `decision` (§3.1 equations)."""
+    g = decision.split
+    dev = env.device
+    tp = env.n_tp
+    # per-TP-shard sizes; OSDP reasons about the per-device residue
+    # training holds optimizer states; serving only the bf16 weights
+    state_bytes = (op.state_bytes if env.train else op.param_bytes) / tp
+    param_bytes = op.param_bytes / tp
+    tokens = batch_per_device * seq_len
+    act = op.act_bytes_per_token / tp * tokens
+    if env.checkpointing:
+        # activations inside a layer are rematerialized: only one layer's
+        # working set is live (the layer-boundary checkpoints are counted
+        # once in ModelDescription.resident_act_bytes_per_token)
+        act /= max(1, op.layers)
+    compute = (op.flops_per_token * tokens / tp
+               / (dev.peak_flops * dev.mxu_efficiency))
+    if env.train:
+        compute *= 3.0            # fwd + bwd (2x fwd)
+    if env.checkpointing:
+        compute *= 1.30           # the paper's ~30% recompute overhead
+
+    # merge adjacent same-mode slices: the implementation stores them as
+    # one array -> one collective (sharding.specs._merge_modes), so the
+    # cost model must too, or uniform split plans would be over-charged
+    # (N-1) alpha per slice.
+    runs: List[Tuple[str, int]] = []
+    for mode in decision.modes:
+        if runs and runs[-1][0] == mode:
+            runs[-1] = (mode, runs[-1][1] + 1)
+        else:
+            runs.append((mode, 1))
+
+    mem = 0.0
+    peak = 0.0
+    comm = 0.0
+    for mode, run_len in runs:
+        s_bytes = state_bytes * run_len / g
+        p_bytes = param_bytes * run_len / g
+        n = shard_ways(mode, env)
+        mem += s_bytes / n
+        if mode == DP:
+            # grads all-reduced over the full data extent (training only)
+            if env.train:
+                comm += 2 * _ring_time(p_bytes, env.n_data, dev.alpha,
+                                       dev.link_bw("data"))
+        else:
+            if env.train:
+                rounds = 3 + (1 if env.checkpointing else 0)
+            else:
+                rounds = 1    # serving: one forward gather, no grad sync
+            # splitting processes the run's slices sequentially: one
+            # collective per slice -> alpha charged run_len times, beta
+            # on the total bytes (matches chunked execution).
+            alpha_eff = dev.alpha * run_len
+            if mode == ZDP:
+                # flat all-gather over pod x data; bottleneck link is the
+                # slowest axis crossed
+                bw = min(dev.link_bw(a) for a in env.mesh.axes
+                         if a in ("pod", "data"))
+                comm += rounds * _ring_time(p_bytes, env.n_data, alpha_eff,
+                                            bw)
+            else:  # ZDP_POD: gather within pod over ICI; grads still
+                # all-reduced across pods (DP over the pod axis)
+                comm += rounds * _ring_time(p_bytes, env.n_data_local,
+                                            alpha_eff, dev.link_bw("data"))
+                n_pods = env.n_data // env.n_data_local
+                comm += 2 * _ring_time(p_bytes / env.n_data_local, n_pods,
+                                       dev.alpha, dev.link_bw("pod"))
+            # M_extra (paper §3.1/§3.3): the gathered slice is transient
+            # but counted additively per op, at the granularity actually
+            # gathered — one layer's slice (scan gathers per layer).
+            gathered = param_bytes / (max(1, op.layers) * g)
+            mem += gathered
+            peak = max(peak, gathered)
+    return OpCost(memory=mem + act, peak_extra=peak, time=comm + compute,
+                  comm_time=comm, compute_time=compute)
+
+
+@dataclass
+class PlanCost:
+    memory: float        # steady per-device bytes
+    peak_memory: float   # steady + worst transient gather
+    time: float          # seconds per step
+    comm_time: float
+    compute_time: float
+    throughput: float    # tokens / s (global)
+
+
+def plan_cost(desc: ModelDescription, decisions: Dict[str, Decision],
+              global_batch: int, env: CostEnv) -> PlanCost:
+    """The paper's T(p, b), M(p, b) over the whole operator list."""
+    bpd = max(1, global_batch // env.n_data)
+    seq = desc.shape.seq_len
+    mem = desc.resident_act_bytes_per_token * bpd * seq / env.n_tp
+    peak = 0.0
+    time = comm = compute = 0.0
+    for op in desc.operators:
+        dec = decisions.get(op.name)
+        if dec is None:
+            dec = Decision(op.name, (DP,))
+        c = op_cost(op, dec, bpd, seq, env)
+        mem += c.memory
+        peak = max(peak, c.peak_extra)
+        time += c.time
+        comm += c.comm_time
+        compute += c.compute_time
+    tokens = global_batch * seq
+    return PlanCost(memory=mem, peak_memory=mem + peak, time=time,
+                    comm_time=comm, compute_time=compute,
+                    throughput=tokens / time if time > 0 else 0.0)
+
+
+# convenience whole-model plans ----------------------------------------------
+
+def uniform_plan(desc: ModelDescription, mode: str,
+                 split: int = 1) -> Dict[str, Decision]:
+    out = {}
+    for op in desc.operators:
+        if not op.decidable:
+            out[op.name] = Decision(op.name, (DP,))
+        else:
+            g = split if (split > 1 and op.splittable) else 1
+            out[op.name] = Decision(op.name, (mode,) * g)
+    return out
+
+
+def zdp_saving(op: OperatorDesc, env: CostEnv, mode: str = ZDP,
+               split: int = 1) -> float:
+    """Net memory bytes saved by moving op from DP to `mode` at slice
+    granularity `split`: sharded model states minus the transiently
+    gathered per-layer slice (paper M_extra; shrinks with splitting)."""
+    n = shard_ways(mode, env)
+    s = op.state_bytes / env.n_tp
+    gathered = op.param_bytes / env.n_tp / (max(1, op.layers) * max(1, split))
+    return max(0.0, s * (1 - 1 / n) - gathered)
+
+
+def zdp_extra_time(op: OperatorDesc, env: CostEnv, mode: str = ZDP) -> float:
+    """Per-step seconds added by moving op from DP to `mode`."""
+    d_dp = Decision(op.name, (DP,))
+    d_z = Decision(op.name, (mode,))
+    # batch/seq affect only compute, identical across modes -> use 1,1
+    c_dp = op_cost(op, d_dp, 1, 1, env)
+    c_z = op_cost(op, d_z, 1, 1, env)
+    return c_z.comm_time - c_dp.comm_time

@@ -1,0 +1,87 @@
+"""Operator splitting (§3.3) as sequential chunked computation.
+
+Two realizations of the paper's slice-and-sum (see DESIGN.md §3):
+
+  * `chunked_matmul` — `lax.scan` over contraction-dim slices. XLA's
+    buffer liveness keeps only one (gathered) weight slice plus the
+    accumulator alive, bounding the peak to size/g + accumulator. This
+    is the plan-uniform-mode path (mixed-mode plans get per-segment
+    arrays via `sharding.specs.seg_matmul` instead).
+  * the Pallas `split_matmul` kernel (kernels/split_matmul.py) — the
+    same idea pushed to the on-chip level: VMEM block tiling with a
+    K-grid accumulator, so at most one (bk, bn) weight tile is resident.
+
+`chunked_ffn` applies the scan form to a whole SwiGLU FFN so the
+(tokens, d_ff) hidden never fully materializes either.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_matmul(x: jax.Array, w: jax.Array, granularity: int,
+                   accum_dtype=jnp.float32) -> jax.Array:
+    """y = x @ w computed as sum over `granularity` contraction slices.
+
+    x: (..., K), w: (K, N) -> (..., N). K must be divisible by g (the
+    caller pads or lowers g otherwise).
+    """
+    k = x.shape[-1]
+    g = max(1, granularity)
+    if g == 1 or k % g != 0:
+        return x @ w
+    c = k // g
+    xs = x.reshape(*x.shape[:-1], g, c)
+    xs = jnp.moveaxis(xs, -2, 0)                   # (g, ..., c)
+    ws = w.reshape(g, c, w.shape[-1])              # (g, c, N)
+
+    def body(acc, slc):
+        xg, wg = slc
+        return acc + jnp.matmul(
+            xg, wg, preferred_element_type=accum_dtype), None
+
+    init = jnp.zeros((*x.shape[:-1], w.shape[-1]), accum_dtype)
+    acc, _ = jax.lax.scan(body, init, (xs, ws))
+    return acc.astype(x.dtype)
+
+
+def chunked_ffn(x: jax.Array, w13: jax.Array, w2: jax.Array,
+                granularity: int, act: str = "swiglu") -> jax.Array:
+    """SwiGLU/GeLU FFN with the d_ff dimension processed in g chunks.
+
+    x:(...,d) w13:(d,2*ff|ff) w2:(ff,d). Peak hidden activation is
+    ff/g wide; outputs accumulate in fp32.
+    """
+    ff = w2.shape[0]
+    g = max(1, granularity)
+    if g == 1 or ff % g != 0:
+        h = _act(x @ w13, act)
+        return (h @ w2).astype(x.dtype)
+    c = ff // g
+    two = 2 if act == "swiglu" else 1
+    w13s = w13.reshape(w13.shape[0], two, g, c)    # split ff dim
+    w13s = jnp.moveaxis(w13s, 2, 0)                # (g, d, two, c)
+    w2s = w2.reshape(g, c, w2.shape[-1])
+
+    def body(acc, slc):
+        w13g, w2g = slc
+        hg = _act(jnp.tensordot(x, w13g.reshape(w13g.shape[0], two * c),
+                                axes=1), act, chunk=c)
+        return acc + jnp.matmul(hg, w2g,
+                                preferred_element_type=jnp.float32), None
+
+    init = jnp.zeros((*x.shape[:-1], w2.shape[-1]), jnp.float32)
+    acc, _ = jax.lax.scan(body, init, (w13s, w2s))
+    return acc.astype(x.dtype)
+
+
+def _act(h: jax.Array, act: str, chunk: Optional[int] = None) -> jax.Array:
+    if act == "swiglu":
+        c = chunk if chunk is not None else h.shape[-1] // 2
+        g1, g3 = h[..., :c], h[..., c:]
+        return jax.nn.silu(g1.astype(jnp.float32)).astype(h.dtype) * g3
+    return jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)

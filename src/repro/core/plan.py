@@ -1,0 +1,87 @@
+"""Plan compilation: RunConfig -> OSDP decisions -> JAX shardings.
+
+This is the glue between the abstract search (core.search) and the
+concrete distributed program (sharding.specs + launch.*): it runs the
+Profiler+SearchEngine+Scheduler pipeline of the paper and exposes the
+result as the `decisions` dict the model builder consumes, plus the
+activation/batch PartitionSpecs for jit in_shardings.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import DeviceInfo, OSDPConfig, RunConfig
+from repro.core.cost_model import (DP, ZDP, CostEnv, Decision, PlanCost,
+                                   plan_cost, uniform_plan)
+from repro.core.descriptions import ModelDescription, describe
+from repro.core.search import SearchResult, search_plan
+
+
+@dataclass
+class Plan:
+    run: RunConfig
+    desc: ModelDescription
+    decisions: Dict[str, Decision]
+    cost: PlanCost
+    search: Optional[SearchResult]
+
+    def summary(self) -> str:
+        n_zdp = sum(1 for d in self.decisions.values()
+                    if d.uniform() not in (DP, None))
+        n_mixed = sum(1 for d in self.decisions.values()
+                      if d.uniform() is None)
+        lines = [
+            f"plan[{self.run.model.name} x {self.run.shape.name}] "
+            f"ops={len(self.decisions)} zdp={n_zdp} mixed={n_mixed}",
+            f"  est memory/device = {self.cost.memory / 2**30:.2f} GiB "
+            f"(peak {self.cost.peak_memory / 2**30:.2f})",
+            f"  est step time = {self.cost.time * 1e3:.2f} ms "
+            f"(comm {self.cost.comm_time * 1e3:.2f}, "
+            f"compute {self.cost.compute_time * 1e3:.2f})",
+            f"  est throughput = {self.cost.throughput / 1e6:.2f} Mtok/s",
+        ]
+        return "\n".join(lines)
+
+
+def make_plan(run: RunConfig,
+              device: Optional[DeviceInfo] = None) -> Plan:
+    """Run the OSDP pipeline for a RunConfig with a fixed global batch."""
+    device = device or DeviceInfo()
+    desc = describe(run.model, run.shape)
+    env = CostEnv(device, run.mesh,
+                  checkpointing=run.osdp.checkpointing,
+                  train=(run.shape.kind == "train"))
+    if not run.osdp.enabled:
+        decisions = uniform_plan(desc, DP)
+        cost = plan_cost(desc, decisions, run.shape.global_batch, env)
+        return Plan(run, desc, decisions, cost, None)
+    res = search_plan(desc, run.shape.global_batch, env, run.osdp)
+    return Plan(run, desc, res.decisions, res.cost, res)
+
+
+# --- activation / batch shardings -------------------------------------------
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def data_sharding(mesh: Mesh, ndim: int = 2,
+                  batch_axis: int = 0) -> NamedSharding:
+    """Global-batch arrays: batch dim over (pod, data)."""
+    parts = [None] * ndim
+    parts[batch_axis] = batch_axes(mesh)
+    return NamedSharding(mesh, P(*parts))
+
+
+def seq_sharding(mesh: Mesh, ndim: int, seq_axis: int) -> NamedSharding:
+    """Sequence-sharded arrays (long_500k KV cache: batch=1)."""
+    parts = [None] * ndim
+    parts[seq_axis] = "data"
+    return NamedSharding(mesh, P(*parts))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

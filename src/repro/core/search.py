@@ -1,0 +1,392 @@
+"""OSDP Search Engine + Scheduler (paper Algorithm 1).
+
+Three solvers over the same problem
+    min_p  T(p, b)   s.t.  M(p, b) <= M_limit,  p_i in {DP, ZDP[, ZDP_POD]}
+
+  * ``dfs``      — the paper's depth-first search with its two pruning
+                   rules (memory-exceeded, worse-than-incumbent), made
+                   exact-and-fast with branch-and-bound lower bounds and
+                   best-ratio branch ordering. Paper-faithful semantics:
+                   returns the same argmin as brute force.
+  * ``knapsack`` — beyond-paper exact solver: choosing ZDP for op i
+                   saves dM_i memory and costs dT_i time, so the problem
+                   is a 0/1 knapsack-cover; solved by DP over discretized
+                   memory savings. O(n * M/Q) with quantum Q.
+  * ``greedy``   — dT/dM ratio heuristic, O(n log n); near-optimal when
+                   savings are small relative to the gap (used to seed
+                   the DFS incumbent).
+
+The Scheduler sweeps the batch size b upward until even the
+all-ZDP+split plan exceeds the limit, keeping the throughput-argmax
+(Algorithm 1 lines 3–18, 20).
+"""
+from __future__ import annotations
+
+import time as _time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import OSDPConfig
+from repro.core.cost_model import (DP, ZDP, ZDP_POD, CostEnv, Decision,
+                                   PlanCost, plan_cost, uniform_plan,
+                                   zdp_extra_time, zdp_saving)
+from repro.core.descriptions import ModelDescription, OperatorDesc
+
+
+@dataclass
+class SliceItem:
+    """One decidable unit: an operator slice (whole op if unsplit)."""
+
+    op_name: str
+    slice_idx: int
+    n_slices: int
+    savings: Dict[str, float]      # mode -> steady bytes saved vs DP
+    extra_time: Dict[str, float]   # mode -> seconds added vs DP
+
+
+@dataclass
+class SearchResult:
+    decisions: Dict[str, Decision]
+    cost: PlanCost
+    batch_size: int
+    feasible: bool
+    solver: str
+    search_seconds: float
+    nodes_visited: int = 0
+    candidates: List[Tuple[int, float]] = field(default_factory=list)
+    # (batch, throughput) per Scheduler iteration — Algorithm 1's P set
+
+
+def auto_granularity(op, env: CostEnv, osdp: OSDPConfig,
+                     candidates=(1, 2, 4, 8, 16)) -> int:
+    """Per-operator slice granularity (beyond paper — §4.3 names this
+    as open future work).
+
+    Larger g shrinks the transiently-gathered slice (M_extra/g) but
+    adds (g-1) extra collective-latency terms. Pick the g minimizing
+        alpha_cost(g) + shadow_price * gathered(g)
+    where the shadow price converts bytes to seconds at the ring rate
+    of this op's own gather (the marginal cost of covering the same
+    bytes by sharding some other operator instead)."""
+    if not (osdp.operator_splitting and op.splittable):
+        return 1
+    dev = env.device
+    n = env.n_data
+    rounds = (3 + (1 if env.checkpointing else 0)) if env.train else 1
+    gathered_full = op.param_bytes / env.n_tp / max(1, op.layers)
+    # seconds per byte of memory covered by sharding elsewhere
+    shadow = rounds * (n - 1) / n / min(
+        dev.link_bw(a) for a in env.mesh.axes if a in ("pod", "data"))
+
+    def total(g: int) -> float:
+        alpha_cost = rounds * (n - 1) * dev.alpha * (g - 1)
+        return alpha_cost + shadow * gathered_full / g
+
+    return min(candidates, key=total)
+
+
+def _build_items(desc: ModelDescription, env: CostEnv,
+                 osdp: OSDPConfig) -> List[SliceItem]:
+    modes = [ZDP]
+    if osdp.allow_pod_hierarchical and env.mesh.multi_pod:
+        modes.append(ZDP_POD)
+    items: List[SliceItem] = []
+    for op in desc.decidable():
+        if osdp.auto_granularity:
+            g = auto_granularity(op, env, osdp)
+        else:
+            g = (osdp.default_slice_granularity
+                 if (osdp.operator_splitting and op.splittable) else 1)
+        sav = {m: zdp_saving(op, env, m, g) / g for m in modes}
+        ext = {m: zdp_extra_time(op, env, m) / g for m in modes}
+        for j in range(g):
+            items.append(SliceItem(op.name, j, g, sav, ext))
+    return items
+
+
+def _items_to_decisions(desc: ModelDescription, items: List[SliceItem],
+                        choice: List[Optional[str]]) -> Dict[str, Decision]:
+    per_op: Dict[str, List[str]] = {}
+    for it, c in zip(items, choice):
+        per_op.setdefault(it.op_name, [DP] * it.n_slices)
+        per_op[it.op_name][it.slice_idx] = c or DP
+    out: Dict[str, Decision] = {}
+    for op in desc.operators:
+        if op.name in per_op:
+            out[op.name] = Decision(op.name, tuple(per_op[op.name]))
+        else:
+            out[op.name] = Decision(op.name, (DP,))
+    return out
+
+
+def _base_cost(desc: ModelDescription, batch: int,
+               env: CostEnv) -> PlanCost:
+    """Cost of the all-DP plan — the reference the items perturb."""
+    return plan_cost(desc, uniform_plan(desc, DP), batch, env)
+
+
+# ---------------------------------------------------------------------------
+# Solver 1: the paper's DFS (branch and bound, exact)
+# ---------------------------------------------------------------------------
+
+def _solve_dfs(items: List[SliceItem], need: float,
+               node_budget: int = 2_000_000) -> Tuple[List[Optional[str]], int]:
+    """Minimize sum extra_time s.t. sum savings >= need.
+
+    Paper Algorithm 1 lines 5–11: traverse {DP, ZDP}^n depth-first,
+    pruning on (a) memory infeasibility and (b) incumbent time bound.
+    We order operators by best dT/dM ratio and add an admissible bound
+    (remaining need * best remaining ratio), which keeps the traversal
+    exact while visiting few nodes.
+    """
+    n = len(items)
+    if need <= 0:
+        return [None] * n, 1
+
+    def best_ratio(it: SliceItem) -> float:
+        return min(it.extra_time[m] / max(it.savings[m], 1e-9)
+                   for m in it.savings)
+
+    order = sorted(range(n), key=lambda i: best_ratio(items[i]))
+    # suffix quantities for bounds
+    suffix_sav = [0.0] * (n + 1)
+    suffix_best_ratio = [float("inf")] * (n + 1)
+    for i in range(n - 1, -1, -1):
+        it = items[order[i]]
+        suffix_sav[i] = suffix_sav[i + 1] + max(it.savings.values())
+        suffix_best_ratio[i] = min(suffix_best_ratio[i + 1], best_ratio(it))
+
+    # greedy incumbent
+    incumbent_choice, incumbent_time = _solve_greedy(items, need)
+    best_time = incumbent_time
+    best_choice = list(incumbent_choice)
+    nodes = 0
+    choice: List[Optional[str]] = [None] * n
+
+    # pre-sorted branch options per item: cheapest-ratio mode first, DP last
+    branches: List[List[Optional[str]]] = []
+    for i in range(n):
+        it = items[order[i]]
+        ms = sorted(it.savings, key=lambda m: it.extra_time[m]
+                    / max(it.savings[m], 1e-9))
+        branches.append(ms + [None])
+
+    # iterative DFS: frames of (depth, saved, t, next-branch index)
+    stack = [(0, 0.0, 0.0, 0)]
+    while stack:
+        i, saved, t, bi = stack.pop()
+        if bi == 0:
+            nodes += 1
+            if nodes > node_budget:
+                break
+            if saved >= need:
+                if t < best_time:
+                    best_time = t
+                    best_choice = list(choice)
+                continue
+            if i == n:
+                continue  # infeasible leaf
+            # prune: even sharding everything left cannot cover the need
+            if saved + suffix_sav[i] < need:
+                continue
+            # prune: admissible lower bound on remaining time
+            if t + (need - saved) * suffix_best_ratio[i] >= best_time:
+                continue
+        opts = branches[i]
+        if bi >= len(opts):
+            choice[order[i]] = None
+            continue
+        # re-check the bound when revisiting (incumbent may have improved)
+        if bi > 0 and t + (need - saved) * suffix_best_ratio[i] >= best_time:
+            choice[order[i]] = None
+            continue
+        m = opts[bi]
+        stack.append((i, saved, t, bi + 1))   # resume point
+        choice[order[i]] = m
+        if m is None:
+            stack.append((i + 1, saved, t, 0))
+        else:
+            it = items[order[i]]
+            stack.append((i + 1, saved + it.savings[m],
+                          t + it.extra_time[m], 0))
+
+    return best_choice, nodes
+
+
+# ---------------------------------------------------------------------------
+# Solver 2: exact knapsack-cover DP (beyond paper)
+# ---------------------------------------------------------------------------
+
+def _solve_knapsack(items: List[SliceItem], need: float,
+                    quantum: float = 16 * 2**20) -> List[Optional[str]]:
+    """DP over discretized memory saving. Savings are rounded DOWN (so a
+    'covered' answer is truly feasible); `need` is rounded up."""
+    n = len(items)
+    if need <= 0:
+        return [None] * n
+    cap = int(-(-need // quantum))          # ceil
+    INF = float("inf")
+    # dp[s] = min time to save >= s quanta (clamped at cap)
+    dp = [INF] * (cap + 1)
+    dp[0] = 0.0
+    parent: List[List[Optional[Tuple[int, str]]]] = [
+        [None] * (cap + 1) for _ in range(n + 1)]
+    for i, it in enumerate(items):
+        ndp = dp[:]
+        npar = [None] * (cap + 1)
+        for m, sav in it.savings.items():
+            q = int(sav // quantum)
+            if q == 0:
+                continue
+            t = it.extra_time[m]
+            for s in range(cap + 1):
+                if dp[s] == INF:
+                    continue
+                s2 = min(cap, s + q)
+                if dp[s] + t < ndp[s2]:
+                    ndp[s2] = dp[s] + t
+                    npar[s2] = (s, m)
+        dp = ndp
+        parent[i + 1] = npar  # type: ignore[assignment]
+    if dp[cap] == INF:
+        # infeasible even at full sharding
+        return [max(it.savings, key=it.savings.get) for it in items]
+    # backtrack
+    choice: List[Optional[str]] = [None] * n
+    s = cap
+    for i in range(n, 0, -1):
+        p = parent[i][s]
+        if p is not None:
+            s, m = p
+            choice[i - 1] = m
+    return choice
+
+
+# ---------------------------------------------------------------------------
+# Solver 3: greedy ratio heuristic
+# ---------------------------------------------------------------------------
+
+def _solve_greedy(items: List[SliceItem],
+                  need: float) -> Tuple[List[Optional[str]], float]:
+    n = len(items)
+    choice: List[Optional[str]] = [None] * n
+    if need <= 0:
+        return choice, 0.0
+    ranked = []
+    for i, it in enumerate(items):
+        m = min(it.savings, key=lambda m: it.extra_time[m]
+                / max(it.savings[m], 1e-9))
+        ranked.append((it.extra_time[m] / max(it.savings[m], 1e-9), i, m))
+    ranked.sort()
+    saved = t = 0.0
+    for _, i, m in ranked:
+        if saved >= need:
+            break
+        choice[i] = m
+        saved += items[i].savings[m]
+        t += items[i].extra_time[m]
+    return choice, (t if saved >= need else float("inf"))
+
+
+# ---------------------------------------------------------------------------
+# Search Engine: fixed-b solve
+# ---------------------------------------------------------------------------
+
+def search_plan(desc: ModelDescription, global_batch: int, env: CostEnv,
+                osdp: OSDPConfig) -> SearchResult:
+    t0 = _time.perf_counter()
+    if osdp.force_mode:
+        dec = uniform_plan(
+            desc, osdp.force_mode,
+            osdp.default_slice_granularity if osdp.operator_splitting else 1)
+        cost = plan_cost(desc, dec, global_batch, env)
+        return SearchResult(dec, cost, global_batch,
+                            cost.peak_memory <= osdp.memory_limit_bytes,
+                            f"forced:{osdp.force_mode}",
+                            _time.perf_counter() - t0)
+
+    items = _build_items(desc, env, osdp)
+    base = _base_cost(desc, global_batch, env)
+    need = base.memory - osdp.memory_limit_bytes
+    nodes = 0
+    if osdp.search == "dfs":
+        choice, nodes = _solve_dfs(items, need)
+    elif osdp.search == "knapsack":
+        choice = _solve_knapsack(items, need)
+    elif osdp.search == "greedy":
+        choice, _ = _solve_greedy(items, need)
+    else:
+        raise ValueError(f"unknown solver {osdp.search!r}")
+    decisions = _items_to_decisions(desc, items, choice)
+    cost = plan_cost(desc, decisions, global_batch, env)
+
+    # Repair: per-slice savings are exact for uniform runs but slightly
+    # optimistic for mixed ones (each ZDP run re-gathers a slice), so
+    # the Profiler's evaluation can come out a hair over the limit.
+    # Flip the cheapest remaining DP slices until the evaluation fits.
+    if cost.memory > osdp.memory_limit_bytes:
+        remaining = sorted(
+            (i for i, c in enumerate(choice) if c is None),
+            key=lambda i: min(items[i].extra_time[m]
+                              / max(items[i].savings[m], 1e-9)
+                              for m in items[i].savings))
+        for i in remaining:
+            it = items[i]
+            choice[i] = min(it.savings,
+                            key=lambda m: it.extra_time[m]
+                            / max(it.savings[m], 1e-9))
+            decisions = _items_to_decisions(desc, items, choice)
+            cost = plan_cost(desc, decisions, global_batch, env)
+            if cost.memory <= osdp.memory_limit_bytes:
+                break
+        if cost.memory > osdp.memory_limit_bytes:
+            # escalate every slice to its max-saving mode (ZDP) — the
+            # most-sharded plan is the feasibility frontier
+            choice = [max(it.savings, key=it.savings.get) for it in items]
+            decisions = _items_to_decisions(desc, items, choice)
+            cost = plan_cost(desc, decisions, global_batch, env)
+
+    return SearchResult(decisions, cost, global_batch,
+                        cost.memory <= osdp.memory_limit_bytes,
+                        osdp.search, _time.perf_counter() - t0, nodes)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: batch-size sweep (Algorithm 1 outer loop)
+# ---------------------------------------------------------------------------
+
+def schedule(desc: ModelDescription, env: CostEnv, osdp: OSDPConfig,
+             batch_candidates: Optional[Sequence[int]] = None,
+             max_batch: int = 4096) -> SearchResult:
+    t0 = _time.perf_counter()
+    best: Optional[SearchResult] = None
+    cands: List[Tuple[int, float]] = []
+    batches = (list(batch_candidates) if batch_candidates is not None
+               else _default_batches(max_batch, env))
+    for b in batches:
+        res = search_plan(desc, b, env, osdp)
+        if not res.feasible:
+            # Algorithm 1 line 12–14: all plans exceed the limit -> stop
+            if best is not None:
+                break
+            continue
+        cands.append((b, res.cost.throughput))
+        if best is None or res.cost.throughput > best.cost.throughput:
+            best = res
+    if best is None:
+        # nothing fits even fully sharded: return the most-sharded plan
+        best = search_plan(desc, batches[0], env, osdp)
+    best.candidates = cands
+    best.search_seconds = _time.perf_counter() - t0
+    return best
+
+
+def _default_batches(max_batch: int, env: CostEnv) -> List[int]:
+    # per-device microbatch 1,2,3,... like Algorithm 1's b in {1,2,3,...}
+    n = env.n_data
+    out = []
+    b = n
+    while b <= max_batch:
+        out.append(b)
+        b += n
+    return out or [n]

@@ -1,0 +1,121 @@
+"""flash_attention — online-softmax attention Pallas kernel (GQA + SWA).
+
+Grid: (B * KV, S/bq, T/bk); the key dimension is iterated sequentially
+with running (m, l, acc) carried in VMEM scratch, so the (S, T) score
+matrix never exists and at most one (bk, hd) K/V tile is resident per
+step. Sliding-window and causal masking are position arithmetic on
+block indices; fully-masked key blocks still execute (uniform grid) but
+contribute zero — the TPU production variant would prune them with a
+grid remap, noted in EXPERIMENTS.md §Perf.
+
+Layouts match the model path (models/attention.py):
+  q: (B, KV, G, S, hd)   k/v: (B, KV, T, hd)   out like q
+G folds into the score-matrix row dim ((bq*G, bk) MXU tiles).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            causal: bool, window: int, scale: float, t_valid: int):
+    bq_i = pl.program_id(1)
+    bk_i = pl.program_id(2)
+
+    @pl.when(bk_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                      # (G, bq, hd)
+    k = k_ref[0]                         # (bk, hd)
+    v = v_ref[0]
+    G, bq, hd = q.shape
+    bk = k.shape[0]
+
+    s = jax.lax.dot_general(
+        q.reshape(G * bq, hd), k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale      # (G*bq, bk)
+
+    q_pos = bq_i * bq + jax.lax.broadcasted_iota(jnp.int32, (G * bq, bk), 0
+                                                 ) % bq
+    # NOTE: rows are (g, q) pairs flattened; q index = row % bq
+    k_pos = bk_i * bk + jax.lax.broadcasted_iota(jnp.int32, (G * bq, bk), 1)
+    mask = k_pos < t_valid
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window > 0:
+        mask = mask & (q_pos - k_pos < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                  # (G*bq,)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = (acc_ref[...] * corr[:, None]
+                    + jax.lax.dot_general(
+                        p, v.astype(jnp.float32),
+                        (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(bk_i == pl.num_programs(2) - 1)
+    def _flush():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = out.reshape(G, bq, hd).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    bq: int = 512, bk: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, KV, G, S, hd); k, v: (B, KV, T, hd) -> like q."""
+    B, KV, G, S, hd = q.shape
+    T = k.shape[2]
+    bq, bk = min(bq, S), min(bk, T)
+    assert S % bq == 0, (S, bq)
+    tpad = (-T) % bk
+    if tpad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, tpad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, tpad), (0, 0)))
+    Tp = T + tpad
+    # fold (B, KV) into one grid dim
+    qf = q.reshape(B * KV, 1, G, S, hd).transpose(0, 1, 2, 3, 4)
+    kf = k.reshape(B * KV, Tp, hd)
+    vf = v.reshape(B * KV, Tp, hd)
+    grid = (B * KV, S // bq, Tp // bk)
+    kern = functools.partial(_kernel, causal=causal, window=window,
+                             scale=1.0 / math.sqrt(hd), t_valid=T)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, bq, hd), lambda b, i, j: (b, 0, 0, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, bq, hd),
+                               lambda b, i, j: (b, 0, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, 1, G, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G * bq,), jnp.float32),
+            pltpu.VMEM((G * bq,), jnp.float32),
+            pltpu.VMEM((G * bq, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, KV, G, S, hd)

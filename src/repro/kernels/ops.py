@@ -1,0 +1,40 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On TPU the compiled kernels run natively; elsewhere (this CPU
+container) they execute in `interpret=True` mode, which runs the exact
+kernel body per grid step — correctness-identical, used by the test
+sweeps. `use_pallas()` reports whether the native path is available.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.split_matmul import split_matmul as _split_matmul
+from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
+
+
+def use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interp(interpret):
+    return (not use_pallas()) if interpret is None else interpret
+
+
+def split_matmul(x, w, *, bm: int = 512, bn: int = 512, bk: int = 512,
+                 interpret=None):
+    return _split_matmul(x, w, bm=bm, bn=bn, bk=bk,
+                         interpret=_interp(interpret))
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 512, bk: int = 512, interpret=None):
+    return _flash(q, k, v, causal=causal, window=window, bq=bq, bk=bk,
+                  interpret=_interp(interpret))
+
+
+def ssd_scan(x, dt, a_log, b, c, *, chunk: int = 256, bh: int = 0,
+             interpret=None):
+    return _ssd_scan(x, dt, a_log, b, c, chunk=chunk, bh=bh,
+                     interpret=_interp(interpret))

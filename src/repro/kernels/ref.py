@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (self-contained)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def split_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32)).astype(x.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0) -> jax.Array:
+    """q: (B,KV,G,S,hd), k/v: (B,KV,T,hd) — kernel layout."""
+    B, KV, G, S, hd = q.shape
+    T = k.shape[2]
+    s = jnp.einsum("bkgqh,bkth->bkgqt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window:
+        mask = mask & (q_pos - k_pos < window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgqt,bkth->bkgqh", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                 b: jax.Array, c: jax.Array) -> jax.Array:
+    """Sequential state-space recurrence (x:(B,S,nh,hd), b/c:(B,S,ns))."""
+    B, S, nh, hd = x.shape
+    ns = b.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dtf = dt.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+
+    def step(s, t):
+        dec = jnp.exp(dtf[:, t] * a)
+        upd = jnp.einsum("bs,bnh->bnhs", bf[:, t],
+                         xf[:, t] * dtf[:, t][..., None])
+        s = s * dec[:, :, None, None] + upd
+        y = jnp.einsum("bs,bnhs->bnh", cf[:, t], s)
+        return s, y
+
+    s0 = jnp.zeros((B, nh, hd, ns), jnp.float32)
+    _, ys = jax.lax.scan(step, s0, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

@@ -1,0 +1,90 @@
+"""ssd_scan — Mamba2 SSD chunk scan as a TPU Pallas kernel.
+
+Grid: (B, nh/bh, S/Q) with the chunk dimension sequential; the running
+inter-chunk state (bh, hd, ns) lives in VMEM scratch. Each grid step
+computes the intra-chunk quadratic form (Q x Q attention-like matrix,
+MXU work) plus the contribution of the carried state, then updates the
+state — the chunk-parallel/recurrent split of the SSD paper mapped
+onto the (parallel, parallel, arbitrary) TPU grid.
+
+Layouts: x (B, S, nh, hd), dt (B, S, nh), b/c (B, S, ns), a_log (nh,)
+-> y (B, S, nh, hd). Single B/C group shared by all heads (as in the
+model path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, bh, hd)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q, bh)
+    a = -jnp.exp(a_ref[...].astype(jnp.float32))   # (bh,)
+    b = b_ref[0].astype(jnp.float32)          # (Q, ns)
+    c = c_ref[0].astype(jnp.float32)          # (Q, ns)
+    Q, bh, hd = x.shape
+
+    dA = dt * a[None, :]                      # (Q, bh) log-decay
+    csum = jnp.cumsum(dA, axis=0)             # (Q, bh)
+    xd = x * dt[:, :, None]                   # (Q, bh, hd)
+
+    # intra-chunk quadratic form
+    diff = csum[:, None, :] - csum[None, :, :]          # (Q, Q, bh)
+    mask = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    # mask before exp (masked diffs are positive -> inf otherwise)
+    att = jnp.exp(jnp.where(mask[:, :, None], diff, -jnp.inf))
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    y = jnp.einsum("ij,ijh,jhd->ihd", cb, att, xd)
+
+    # contribution of the carried state + state update
+    s_prev = state_ref[...]                   # (bh, hd, ns)
+    y = y + jnp.exp(csum)[:, :, None] * jnp.einsum(
+        "is,hds->ihd", c, s_prev)
+    decay_to_end = jnp.exp(csum[-1][None, :] - csum)    # (Q, bh)
+    s_new = jnp.einsum("js,jh,jhd->hds", b, decay_to_end, xd)
+    state_ref[...] = s_prev * jnp.exp(csum[-1])[:, None, None] + s_new
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "bh", "interpret"))
+def ssd_scan(x: jax.Array, dt: jax.Array, a_log: jax.Array, b: jax.Array,
+             c: jax.Array, *, chunk: int = 256, bh: int = 0,
+             interpret: bool = False) -> jax.Array:
+    """SSD over (B, S, nh, hd); returns y (no final state — training path)."""
+    B, S, nh, hd = x.shape
+    ns = b.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    bh = bh or nh
+    assert nh % bh == 0, (nh, bh)
+    grid = (B, nh // bh, S // Q)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, bh, hd), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, Q, bh), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((bh,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, Q, ns), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, Q, ns), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, bh, hd),
+                               lambda bi, hi, ci: (bi, ci, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, nh, hd), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bh, hd, ns), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, a_log, b, c)

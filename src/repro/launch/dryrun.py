@@ -1,0 +1,228 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh).
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh).
+
+For each combination this proves, without hardware:
+  * the OSDP plan's PartitionSpecs are coherent (no sharding mismatch),
+  * the program fits the mesh (memory_analysis reports bytes/device),
+  * the collective schedule exists (counted for §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-405b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out out.json]
+
+The XLA_FLAGS line above MUST run before any other jax-touching import
+(jax locks the device count at first init).
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import (ARCHS, MULTI_POD_MESH, SINGLE_POD_MESH, OSDPConfig,
+                           RunConfig, get_arch, get_shape, supported_shapes)
+from repro.core.plan import make_plan
+from repro.launch.mesh import make_mesh_from_config
+from repro.models.registry import (Built, build_model, input_shardings,
+                                   input_specs)
+from repro.optim import init_state, state_shardings
+from repro.roofline.analysis import analyze_lowered, hlo_flops_bytes
+
+
+def _attach_shardings(tree, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree, shardings)
+
+
+def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
+                osdp: Optional[OSDPConfig] = None, compile_: bool = True,
+                verbose: bool = True) -> Dict[str, Any]:
+    """Lower (+ compile) one (arch, shape, mesh). Returns the record for
+    EXPERIMENTS.md §Dry-run / §Roofline."""
+    t_start = time.perf_counter()
+    model_cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    mesh_cfg = MULTI_POD_MESH if multi_pod else SINGLE_POD_MESH
+    osdp = osdp or OSDPConfig()
+    run = RunConfig(model=model_cfg, shape=shape, mesh=mesh_cfg, osdp=osdp)
+    plan = make_plan(run)
+    mesh = make_mesh_from_config(mesh_cfg)
+    built = build_model(run, plan, mesh)
+    model = built.model
+
+    abstract_params = _attach_shardings(built.abstract_params(),
+                                        built.shardings)
+    inputs = input_specs(run)
+    in_sh = input_shardings(run, mesh, inputs)
+    inputs = _attach_shardings(inputs, in_sh)
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    repl = NamedSharding(mesh, P())
+
+    import jax.numpy as jnp
+    from repro.optim import AdamWConfig, AdamWState, apply_update
+    from repro.train.loop import loss_and_grads
+
+    with mesh:
+        if shape.kind == "train":
+            opt_abstract = jax.eval_shape(init_state, abstract_params)
+            opt_sh = state_shardings(built.shardings, repl)
+            opt_abstract = _attach_shardings(
+                opt_abstract._asdict(), opt_sh._asdict())
+
+            def train_step(params, master, m, v, stepc, batch):
+                st = AdamWState(stepc, master, m, v)
+                loss, metrics, grads = loss_and_grads(model, params, batch)
+                p2, st2, _ = apply_update(AdamWConfig(), params, grads, st,
+                                          jnp.float32(1.0))
+                return p2, st2.master, st2.m, st2.v, st2.step, loss
+
+            psh = built.shardings
+            lowered = jax.jit(
+                train_step,
+                in_shardings=(psh, psh, psh, psh, repl, in_sh),
+                out_shardings=(psh, psh, psh, psh, repl, repl),
+            ).lower(abstract_params,
+                    opt_abstract["master"], opt_abstract["m"],
+                    opt_abstract["v"], opt_abstract["step"], inputs)
+        elif shape.kind == "prefill":
+            def prefill_step(params, batch):
+                return model.prefill(params, batch)
+            lowered = jax.jit(prefill_step).lower(abstract_params, inputs)
+        else:  # decode
+            def serve_step(params, caches, tokens, t, positions3=None):
+                return model.decode_step(params, caches, tokens, t,
+                                         positions3=positions3)
+            args = [abstract_params, inputs["caches"], inputs["tokens"],
+                    inputs["t"]]
+            if "positions3" in inputs:
+                args.append(inputs["positions3"])
+            lowered = jax.jit(serve_step).lower(*args)
+
+        t_lower = time.perf_counter()
+        rec: Dict[str, Any] = {
+            "arch": arch, "shape": shape_name, "kind": shape.kind,
+            "mesh": "x".join(map(str, mesh_cfg.shape)),
+            "n_chips": mesh_cfg.n_devices,
+            "params": model_cfg.param_count(),
+            "active_params": model_cfg.active_param_count(),
+            "tokens": (shape.tokens if shape.kind != "decode"
+                       else shape.global_batch),
+            "plan": _plan_digest(plan),
+            "est_memory_gib": plan.cost.memory / 2**30,
+            "lower_s": t_lower - t_start,
+        }
+
+        if compile_:
+            compiled = lowered.compile()
+            t_compile = time.perf_counter()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            # collectives exist only after SPMD partitioning -> compiled text
+            rec["collectives"] = analyze_lowered(compiled.as_text())
+            rec.update({
+                "compile_s": t_compile - t_lower,
+                "memory_analysis": _mem_dict(mem),
+                "cost_analysis": hlo_flops_bytes(cost),
+            })
+        else:
+            rec["collectives"] = analyze_lowered(lowered.as_text())
+        if verbose:
+            _print_rec(rec)
+        return rec
+
+
+def _plan_digest(plan) -> Dict[str, Any]:
+    from repro.core.cost_model import DP
+    modes: Dict[str, str] = {}
+    for name, dec in plan.decisions.items():
+        u = dec.uniform()
+        modes[name] = u if u else "MIXED(" + ",".join(dec.modes) + ")"
+    return modes
+
+
+def _mem_dict(mem) -> Dict[str, float]:
+    keys = ("temp_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes", "peak_memory_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = float(v)
+    return out
+
+
+def _print_rec(rec: Dict[str, Any]) -> None:
+    mem = rec.get("memory_analysis", {})
+    cost = rec.get("cost_analysis", {})
+    coll = rec.get("collectives", {})
+    arg_gib = mem.get("argument_size_in_bytes", 0) / 2**30
+    tmp_gib = mem.get("temp_size_in_bytes", 0) / 2**30
+    print(f"[dryrun] {rec['arch']} x {rec['shape']} @ {rec['mesh']}: "
+          f"lower {rec['lower_s']:.1f}s compile {rec.get('compile_s', 0):.1f}s"
+          f" | args {arg_gib:.2f} GiB temp {tmp_gib:.2f} GiB"
+          f" | flops {cost.get('flops', 0):.3e}"
+          f" | coll bytes {coll.get('total_bytes', 0):.3e}")
+    sys.stdout.flush()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--force-mode", default=None, choices=["DP", "ZDP"])
+    ap.add_argument("--out", default=None, help="write records JSON here")
+    args = ap.parse_args(argv)
+
+    osdp = OSDPConfig(force_mode=args.force_mode) if args.force_mode \
+        else None
+    combos = []
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+    if args.all:
+        for arch, cfg in ARCHS.items():
+            for shape in supported_shapes(cfg):
+                for mp in meshes:
+                    combos.append((arch, shape, mp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        for mp in meshes:
+            combos.append((args.arch, args.shape, mp))
+
+    records, failures = [], []
+    for arch, shape, mp in combos:
+        try:
+            records.append(lower_combo(arch, shape, multi_pod=mp,
+                                       osdp=osdp,
+                                       compile_=not args.no_compile))
+        except Exception as e:  # noqa: BLE001 - report and continue
+            traceback.print_exc()
+            failures.append((arch, shape, mp, repr(e)))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+    print(f"\n[dryrun] {len(records)}/{len(combos)} combos OK, "
+          f"{len(failures)} failed")
+    for f_ in failures:
+        print("  FAIL:", f_)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

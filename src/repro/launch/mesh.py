@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+Functions, not module-level constants — importing this module never
+touches jax device state (required so smoke tests see 1 CPU device
+while the dry-run sees 512 forced host devices).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import MULTI_POD_MESH, SINGLE_POD_MESH, MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
+    return MULTI_POD_MESH if multi_pod else SINGLE_POD_MESH
+
+
+def make_mesh_from_config(cfg: MeshConfig):
+    return jax.make_mesh(cfg.shape, cfg.axes)
+
+
+def make_host_mesh():
+    """1x1 mesh on the real local device (smoke tests / examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,132 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf probe CLI: lower one combo with configurable knobs, dump the
+roofline-relevant evidence (memory_analysis, collective census by
+scope, largest buffers) so hypothesis -> change -> measure cycles can
+diff variants.
+
+  python -m repro.launch.perf_probe --arch llama3-405b --shape train_4k \
+      [--multi-pod] [--force-mode ZDP] [--no-remat] [--microbatch 4] \
+      [--tag baseline]
+"""
+import argparse
+import json
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--force-mode", default=None)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-split", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--memory-gib", type=float, default=16.0)
+    ap.add_argument("--tag", default="probe")
+    ap.add_argument("--dump-hlo", default=None)
+    args = ap.parse_args(argv)
+
+    import dataclasses
+    import jax
+    from repro.configs import (MULTI_POD_MESH, SINGLE_POD_MESH, OSDPConfig,
+                               RunConfig, get_arch, get_shape)
+    from repro.core.plan import make_plan
+    from repro.launch.dryrun import (_attach_shardings, _mem_dict)
+    from repro.launch.mesh import make_mesh_from_config
+    from repro.models.registry import (build_model, input_shardings,
+                                       input_specs)
+    from repro.roofline.analysis import analyze_lowered, hlo_flops_bytes
+    from repro.roofline.probe import collectives_by_scope, largest_tensors
+
+    t0 = time.perf_counter()
+    model_cfg = get_arch(args.arch)
+    shape = get_shape(args.shape)
+    mesh_cfg = MULTI_POD_MESH if args.multi_pod else SINGLE_POD_MESH
+    osdp = OSDPConfig(
+        memory_limit_bytes=args.memory_gib * 2**30,
+        force_mode=args.force_mode,
+        checkpointing=not args.no_remat,
+        operator_splitting=not args.no_split,
+    )
+    run = RunConfig(model=model_cfg, shape=shape, mesh=mesh_cfg, osdp=osdp,
+                    microbatch=args.microbatch)
+    plan = make_plan(run)
+    mesh = make_mesh_from_config(mesh_cfg)
+    built = build_model(run, plan, mesh)
+    model = built.model
+
+    abstract_params = _attach_shardings(built.abstract_params(),
+                                        built.shardings)
+    inputs = input_specs(run)
+    in_sh = input_shardings(run, mesh, inputs)
+    inputs = _attach_shardings(inputs, in_sh)
+
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.optim import AdamWConfig, AdamWState, apply_update, init_state
+    from repro.optim import state_shardings
+    from repro.train.loop import loss_and_grads
+    repl = NamedSharding(mesh, P())
+
+    with mesh:
+        if shape.kind == "train":
+            opt_abstract = jax.eval_shape(init_state, abstract_params)
+            opt_sh = state_shardings(built.shardings, repl)
+            opt_abstract = _attach_shardings(opt_abstract._asdict(),
+                                             opt_sh._asdict())
+
+            def train_step(params, master, m, v, stepc, batch):
+                st = AdamWState(stepc, master, m, v)
+                loss, metrics, grads = loss_and_grads(
+                    model, params, batch, run.microbatch)
+                p2, st2, _ = apply_update(AdamWConfig(), params, grads, st,
+                                          jnp.float32(1.0))
+                return p2, st2.master, st2.m, st2.v, st2.step, loss
+
+            psh = built.shardings
+            lowered = jax.jit(
+                train_step,
+                in_shardings=(psh, psh, psh, psh, repl, in_sh),
+                out_shardings=(psh, psh, psh, psh, repl, repl),
+            ).lower(abstract_params, opt_abstract["master"],
+                    opt_abstract["m"], opt_abstract["v"],
+                    opt_abstract["step"], inputs)
+        elif shape.kind == "prefill":
+            lowered = jax.jit(lambda p, b: model.prefill(p, b)).lower(
+                abstract_params, inputs)
+        else:
+            def serve_step(params, caches, tokens, t, positions3=None):
+                return model.decode_step(params, caches, tokens, t,
+                                         positions3=positions3)
+            a = [abstract_params, inputs["caches"], inputs["tokens"],
+                 inputs["t"]]
+            if "positions3" in inputs:
+                a.append(inputs["positions3"])
+            lowered = jax.jit(serve_step).lower(*a)
+
+        compiled = lowered.compile()
+        txt = compiled.as_text()
+        rec = {
+            "tag": args.tag, "arch": args.arch, "shape": args.shape,
+            "mesh": "x".join(map(str, mesh_cfg.shape)),
+            "elapsed_s": time.perf_counter() - t0,
+            "memory_analysis": _mem_dict(compiled.memory_analysis()),
+            "cost_analysis": hlo_flops_bytes(compiled.cost_analysis()),
+            "collectives": analyze_lowered(txt),
+            "collectives_by_scope": collectives_by_scope(txt),
+            "largest_gib": [
+                (round(g, 3), n) for g, n in largest_tensors(txt)],
+        }
+    if args.dump_hlo:
+        with open(args.dump_hlo, "w") as f:
+            f.write(txt)
+    print(json.dumps(rec, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,75 @@
+"""Training launcher.
+
+    python -m repro.launch.train --arch qwen1.5-0.5b --steps 100 \
+        [--reduced] [--seq 256 --batch 8] [--force-mode ZDP] \
+        [--memory-gib 16] [--ckpt-dir /tmp/ckpt]
+
+Runs the OSDP pipeline (describe -> search -> plan), builds the model
+with the planned shardings on the local mesh, and trains on the
+synthetic pipeline. On a real TPU slice the same RunConfig lowers
+against make_production_mesh() instead (see launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+
+import jax
+
+from repro.configs import (MeshConfig, OSDPConfig, RunConfig, get_arch,
+                           get_shape, reduced)
+from repro.core.plan import make_plan
+from repro.models.registry import build_model
+from repro.optim import AdamWConfig
+from repro.train.loop import train
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the smoke-scale variant (CPU-sized)")
+    ap.add_argument("--seq", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=100)
+    ap.add_argument("--memory-gib", type=float, default=16.0)
+    ap.add_argument("--force-mode", default=None, choices=["DP", "ZDP"])
+    ap.add_argument("--no-osdp", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    model_cfg = get_arch(args.arch)
+    if args.reduced:
+        model_cfg = reduced(model_cfg)
+    shape = get_shape(args.shape)
+    if args.seq or args.batch:
+        shape = dataclasses.replace(
+            shape, seq_len=args.seq or shape.seq_len,
+            global_batch=args.batch or shape.global_batch)
+
+    n_dev = len(jax.devices())
+    mesh_cfg = MeshConfig((n_dev, 1), ("data", "model"))
+    osdp = OSDPConfig(enabled=not args.no_osdp,
+                      memory_limit_bytes=args.memory_gib * 2**30,
+                      force_mode=args.force_mode)
+    run = RunConfig(model=model_cfg, shape=shape, mesh=mesh_cfg, osdp=osdp)
+    plan = make_plan(run)
+    print(plan.summary())
+    mesh = jax.make_mesh(mesh_cfg.shape, mesh_cfg.axes) if n_dev > 1 else None
+    built = build_model(run, plan, mesh)
+    res = train(built, args.steps, seed=args.seed,
+                opt_cfg=AdamWConfig(lr=args.lr), warmup=args.warmup,
+                ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+    print(f"done: {res.steps} steps, loss {res.losses[0]:.4f} -> "
+          f"{res.losses[-1]:.4f}, {res.tokens_per_s:.0f} tok/s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,220 @@
+"""GQA attention: blockwise-flash training path + cached decode path.
+
+Layouts (see common.AttnGeom):
+  q: (B, S, KV, Gp, hd)   — grouped by kv head; Gp includes padding
+  k/v: (B, T, KV, hd)     — kv heads replicated over the model axis
+
+The training/prefill path is an online-softmax blockwise ("flash")
+attention written in pure jnp with `lax.scan` over query and key
+blocks, so the (S, T) score matrix never materializes — mandatory at
+the 32k/500k assigned shapes. The Pallas kernel in
+`repro.kernels.flash_attention` implements the same contract for the
+TPU hot path and is validated against the same oracle.
+
+Decode: the KV cache tags every slot with its absolute position
+(`pos`, -1 = empty), which makes full-cache and rolling sliding-window
+caches uniform: validity/window masking is pure position arithmetic.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import AttnGeom, rotate
+from repro.sharding.specs import ParamSet, seg_matmul
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# blockwise flash attention (pure jnp)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool, window: int = 0, q_offset: int = 0,
+                    bq: int = 512, bk: int = 1024,
+                    scale: Optional[float] = None) -> jax.Array:
+    """q:(B,S,KV,G,hd) k,v:(B,T,KV,hd) -> (B,S,KV,G,hd)."""
+    B, S, KV, G, hd = q.shape
+    T = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    bq = min(bq, S)
+    bk = min(bk, T)
+    # pad S/T to block multiples
+    Sp, Tp = -(-S // bq) * bq, -(-T // bk) * bk
+    qp = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    nq, nk = Sp // bq, Tp // bk
+
+    qb = jnp.moveaxis(qp.reshape(B, nq, bq, KV, G, hd), 1, 0)
+    kb = jnp.moveaxis(kp.reshape(B, nk, bk, KV, hd), 1, 0)
+    vb = jnp.moveaxis(vp.reshape(B, nk, bk, KV, hd), 1, 0)
+
+    def q_step(_, qi_blk):
+        qi, q_blk = qi_blk
+        q_pos = q_offset + qi * bq + jnp.arange(bq)
+
+        def k_step(carry, kj_blk):
+            kj, k_blk, v_blk = kj_blk
+            m, l, acc = carry
+            k_pos = kj * bk + jnp.arange(bk)
+            s = jnp.einsum("bqkgh,btkh->bkgqt", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            msk = (k_pos[None, :] < T)
+            if causal:
+                msk = msk & (k_pos[None, :] <= q_pos[:, None])
+            if window:
+                msk = msk & (q_pos[:, None] - k_pos[None, :] < window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkh->bkgqh", p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, bq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            k_step, (m0, l0, a0), (jnp.arange(nk), kb, vb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # (B,KV,G,bq,hd) -> (B,bq,KV,G,hd)
+        return None, jnp.moveaxis(out, 3, 1)
+
+    _, ob = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    out = jnp.moveaxis(ob, 0, 1).reshape(B, Sp, KV, G, hd)[:, :S]
+    return out.astype(q.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool, window: int = 0,
+                  q_offset: int = 0) -> jax.Array:
+    """Naive oracle — same contract as flash_attention."""
+    B, S, KV, G, hd = q.shape
+    T = k.shape[1]
+    s = jnp.einsum("bqkgh,btkh->bkgqt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    q_pos = q_offset + jnp.arange(S)
+    k_pos = jnp.arange(T)
+    msk = jnp.ones((S, T), bool)
+    if causal:
+        msk = msk & (k_pos[None, :] <= q_pos[:, None])
+    if window:
+        msk = msk & (q_pos[:, None] - k_pos[None, :] < window)
+    s = jnp.where(msk[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkh->bqkgh", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# projections
+# ---------------------------------------------------------------------------
+
+def _proj_qkv(cfg: ModelConfig, geom: AttnGeom, pset: ParamSet,
+              lp: Dict[str, jax.Array], x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, S, _ = x.shape
+    q = seg_matmul(x, lp, pset, "layers/attn/wq", 0)
+    k = seg_matmul(x, lp, pset, "layers/attn/wk", 0)
+    v = seg_matmul(x, lp, pset, "layers/attn/wv", 0)
+    if cfg.qkv_bias:
+        q = q + lp["layers/attn/bq"]
+        k = k + lp["layers/attn/bk"]
+        v = v + lp["layers/attn/bv"]
+    q = q.reshape(B, S, geom.n_kv, geom.group_padded, geom.head_dim)
+    k = k.reshape(B, S, geom.n_kv, geom.head_dim)
+    v = v.reshape(B, S, geom.n_kv, geom.head_dim)
+    return q, k, v
+
+
+def _group_mask(geom: AttnGeom, dtype) -> jax.Array:
+    """(KV, Gp) 1/0 mask zeroing padded q heads."""
+    return (jnp.arange(geom.group_padded) < geom.group).astype(dtype)[None, :]
+
+
+def _out_proj(geom: AttnGeom, pset: ParamSet, lp: Dict[str, jax.Array],
+              o: jax.Array) -> jax.Array:
+    """o: (B,S,KV,Gp,hd) -> (B,S,d); masks padded heads to exact zero."""
+    B, S = o.shape[:2]
+    o = o * _group_mask(geom, o.dtype)[None, None, :, :, None]
+    o = o.reshape(B, S, geom.q_flat)
+    return seg_matmul(o, lp, pset, "layers/attn/wo", 0)
+
+
+# ---------------------------------------------------------------------------
+# block entry points
+# ---------------------------------------------------------------------------
+
+def attn_forward(cfg: ModelConfig, geom: AttnGeom, pset: ParamSet,
+                 lp: Dict[str, jax.Array], x: jax.Array,
+                 positions: jax.Array, *, window: int = 0) -> jax.Array:
+    """Training / prefill attention over a full sequence."""
+    q, k, v = _proj_qkv(cfg, geom, pset, lp, x)
+    q = rotate(cfg, q.reshape(*q.shape[:2], -1, geom.head_dim), positions
+               ).reshape(q.shape)
+    k = rotate(cfg, k, positions)
+    win = window or cfg.sliding_window
+    o = flash_attention(q, k, v, causal=cfg.causal, window=win)
+    return _out_proj(geom, pset, lp, o)
+
+
+def init_kv_cache(cfg: ModelConfig, geom: AttnGeom, batch: int,
+                  cache_len: int, dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    """Per-layer stacked cache pytree (leading L axis)."""
+    L = cfg.n_layers
+    return {
+        "k": jnp.zeros((L, batch, cache_len, geom.n_kv, geom.head_dim), dtype),
+        "v": jnp.zeros((L, batch, cache_len, geom.n_kv, geom.head_dim), dtype),
+        "pos": jnp.full((L, batch, cache_len), -1, jnp.int32),
+    }
+
+
+def attn_decode(cfg: ModelConfig, geom: AttnGeom, pset: ParamSet,
+                lp: Dict[str, jax.Array], x: jax.Array, t: jax.Array,
+                cache: Dict[str, jax.Array], *,
+                window: int = 0,
+                positions3: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode. x: (B,1,d); t: scalar step index; cache holds
+    this layer's slices {k:(B,Sc,KV,hd), v:..., pos:(B,Sc)}."""
+    B = x.shape[0]
+    Sc = cache["k"].shape[1]
+    q, k, v = _proj_qkv(cfg, geom, pset, lp, x)
+    if cfg.rope == "mrope":
+        pos_arg = positions3                       # (B,1,3)
+    else:
+        pos_arg = jnp.broadcast_to(t, (B, 1)).astype(jnp.int32)
+    if cfg.rope != "none":
+        q = rotate(cfg, q.reshape(B, 1, -1, geom.head_dim), pos_arg
+                   ).reshape(q.shape)
+        k = rotate(cfg, k, pos_arg)
+    slot = jnp.where(Sc > 0, t % Sc, 0).astype(jnp.int32)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    pos_new = jnp.broadcast_to(t, (B, 1)).astype(jnp.int32)
+    pos_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], pos_new, slot, axis=1)
+
+    # single-row softmax over the cache (scores are (B,KV,Gp,1,Sc) — small)
+    s = jnp.einsum("bqkgh,btkh->bkgqt", q, k_cache,
+                   preferred_element_type=jnp.float32)
+    s = s / math.sqrt(geom.head_dim)
+    valid = pos_cache >= 0
+    if window:
+        valid = valid & (t - pos_cache < window)
+    valid = valid & (pos_cache <= t)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkh->bqkgh", p, v_cache.astype(jnp.float32)
+                   ).astype(x.dtype)
+    out = _out_proj(geom, pset, lp, o)
+    return out, {"k": k_cache, "v": v_cache, "pos": pos_cache}

@@ -1,0 +1,231 @@
+"""Model construction + abstract input specs for every (arch, shape).
+
+`build_model(run, plan, mesh)` returns a `Built` bundle:
+  * model        — the Model (forward/loss/prefill/decode)
+  * param_specs  — WeightSpec list (for checkpointing / inspection)
+  * abstract()   — ShapeDtypeStruct param tree (dry-run, no allocation)
+  * init(key)    — materialized params (small configs / smoke tests)
+  * shardings    — param sharding tree from the OSDP plan
+
+`input_specs(run)` builds the abstract input batch for the assigned
+shape — tokens/labels for train, request batch for serving — matching
+the carve-outs (audio frames, VLM patches are precomputed embeddings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core.cost_model import Decision
+from repro.core.plan import Plan, batch_axes
+from repro.models.common import attn_geometry
+from repro.models.transformer import Model, build_specs
+from repro.sharding.specs import ParamSet, build_param_set
+
+# VLM stub: patch-embedding budget per sequence (see configs/qwen2_vl_2b)
+N_PATCHES = 256
+
+
+@dataclass
+class Built:
+    model: Model
+    pset_abstract: ParamSet
+    run: RunConfig
+    mesh: Optional[Mesh]
+
+    @property
+    def shardings(self) -> Dict[str, NamedSharding]:
+        return self.pset_abstract.shardings
+
+    def abstract_params(self) -> Dict[str, jax.ShapeDtypeStruct]:
+        return self.pset_abstract.params
+
+    def init(self, key: jax.Array) -> Dict[str, jax.Array]:
+        specs = build_specs(self.run.model,
+                            self.run.mesh.model_parallel if self.mesh else 1)
+        decisions = self.model.decisions
+        concrete = build_param_set(specs, decisions, self.mesh, key,
+                                   abstract=False)
+        return concrete.params
+
+
+def build_model(run: RunConfig, plan: Optional[Plan] = None,
+                mesh: Optional[Mesh] = None) -> Built:
+    cfg = run.model
+    cfg.validate()
+    tp = run.mesh.model_parallel
+    decisions: Dict[str, Decision] = plan.decisions if plan else {}
+    specs = build_specs(cfg, tp)
+    pset = build_param_set(specs, decisions, mesh,
+                           jax.random.PRNGKey(run.seed), abstract=True)
+    geom = attn_geometry(cfg, tp) if cfg.has_attention else None
+    model = Model(cfg=cfg, geom=geom, pset=pset, decisions=decisions,
+                  remat=run.osdp.checkpointing,
+                  swa_window=(run.swa_window
+                              if run.shape.name == "long_500k"
+                              and not cfg.sliding_window else 0),
+                  residual_sharding=_residual_sharding(run, mesh))
+    return Built(model=model, pset_abstract=pset, run=run, mesh=mesh)
+
+
+def _residual_sharding(run: RunConfig, mesh: Optional[Mesh]):
+    """(mesh, shape -> PartitionSpec) for the (B, S, d) residual stream:
+    batch over (pod, data), d over model — axes dropped when they don't
+    divide. See Model.residual_sharding."""
+    if mesh is None or mesh.devices.size <= 1:
+        return None
+    dp = batch_axes(mesh)
+    import numpy as _np
+    n_dp = int(_np.prod([mesh.shape[a] for a in dp]))
+    n_tp = mesh.shape["model"]
+
+    def spec_fn(shape):
+        if len(shape) != 3:
+            return None
+        b, _, d = shape
+        parts = [None, None, None]
+        if b % n_dp == 0:
+            parts[0] = dp
+        if d % n_tp == 0:
+            parts[2] = "model"
+        if parts == [None, None, None]:
+            return None
+        return P(*parts)
+
+    return (mesh, spec_fn)
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(run: RunConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract input batch for (arch, shape) — no device allocation."""
+    cfg, shape = run.model, run.shape
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return train_inputs(cfg, B, S)
+    if shape.kind == "prefill":
+        return prefill_inputs(cfg, B, S)
+    return decode_inputs(run, B, S)
+
+
+def train_inputs(cfg: ModelConfig, B: int, S: int) -> Dict[str, Any]:
+    if cfg.family == "audio":
+        return {
+            "frames": _sds((B, S, cfg.d_model), jnp.bfloat16),
+            "mask": _sds((B, S), jnp.bool_),
+            "labels": _sds((B, S), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        s_text = S - N_PATCHES
+        return {
+            "tokens": _sds((B, s_text), jnp.int32),
+            "patches": _sds((B, N_PATCHES, cfg.d_model), jnp.bfloat16),
+            "positions": _sds((B, S, 3), jnp.int32),
+            "labels": _sds((B, s_text), jnp.int32),
+        }
+    return {
+        "tokens": _sds((B, S), jnp.int32),
+        "labels": _sds((B, S), jnp.int32),
+    }
+
+
+def prefill_inputs(cfg: ModelConfig, B: int, S: int) -> Dict[str, Any]:
+    b = train_inputs(cfg, B, S)
+    b.pop("labels", None)
+    if cfg.family == "audio":
+        b.pop("mask", None)
+    return b
+
+
+def decode_inputs(run: RunConfig, B: int, S: int) -> Dict[str, Any]:
+    """One-token decode with a seq_len cache: {tokens, t, caches...}."""
+    cfg = run.model
+    built = build_model(run)
+    caches = jax.eval_shape(lambda: built.model.init_caches(B, S))
+    out: Dict[str, Any] = {
+        "tokens": _sds((B, 1), jnp.int32),
+        "t": _sds((), jnp.int32),
+        "caches": caches,
+    }
+    if cfg.rope == "mrope":
+        out["positions3"] = _sds((B, 1, 3), jnp.int32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# input shardings
+# ---------------------------------------------------------------------------
+
+def input_shardings(run: RunConfig, mesh: Mesh,
+                    inputs: Dict[str, Any]) -> Dict[str, Any]:
+    """Batch over (pod, data); long_500k caches seq-sharded (DESIGN §6)."""
+    dp = batch_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+    n_tp = mesh.shape["model"]
+
+    def leaf_spec(path: str, leaf) -> NamedSharding:
+        ndim = len(leaf.shape)
+        parts = [None] * ndim
+        batch_ok = lambda ax: leaf.shape[ax] % n_dp == 0
+        if path.startswith("caches/attn"):
+            # (L, B, Sc, KV, hd) — flash-decoding: seq over `model`
+            if ndim >= 2 and batch_ok(1):
+                parts[1] = dp
+                if ndim >= 3 and leaf.shape[2] % n_tp == 0:
+                    parts[2] = "model"
+            elif ndim >= 3:
+                # batch=1 (long_500k): spread the window over everything
+                if leaf.shape[2] % (n_dp * n_tp) == 0:
+                    parts[2] = dp + ("model",)
+                elif leaf.shape[2] % n_tp == 0:
+                    parts[2] = "model"
+        elif path.startswith("caches/ssm/state"):
+            # (L, B, nh, hd, ns): batch over dp, heads over model
+            if batch_ok(1):
+                parts[1] = dp
+            if ndim >= 3 and leaf.shape[2] % n_tp == 0:
+                parts[2] = "model"
+        elif path.startswith("caches/ssm/conv"):
+            if batch_ok(1):
+                parts[1] = dp
+        elif path == "t":
+            pass
+        elif ndim >= 1 and leaf.shape and batch_ok(0):
+            parts[0] = dp
+        return NamedSharding(mesh, P(*parts))
+
+    flat = _flatten("", inputs)
+    specs = {k: leaf_spec(k, v) for k, v in flat.items()}
+    return _unflatten(specs, inputs)
+
+
+def _flatten(prefix: str, tree) -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(f"{prefix}/{k}" if prefix else k, v))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any], like) -> Any:
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            return {k: rec(f"{prefix}/{k}" if prefix else k, v)
+                    for k, v in node.items()}
+        return flat[prefix]
+    return rec("", like)

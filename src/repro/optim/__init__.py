@@ -1,0 +1,3 @@
+from repro.optim.adamw import (AdamWConfig, AdamWState, apply_update,  # noqa
+                               init_state, state_shardings)
+from repro.optim.schedule import warmup_cosine  # noqa: F401

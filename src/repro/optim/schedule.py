@@ -1,0 +1,13 @@
+"""Warmup + cosine LR schedule (scale factor in [0, 1])."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, warmup: int = 100, total: int = 10_000,
+                  min_ratio: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(1.0, warmup)
+    prog = jnp.clip((s - warmup) / jnp.maximum(1.0, total - warmup), 0, 1)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup, warm, cos)

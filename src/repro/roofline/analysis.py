@@ -1,0 +1,188 @@
+"""Roofline analysis from compiled HLO (no hardware needed).
+
+Three terms per (arch x shape x mesh), per the assignment:
+
+    compute    = HLO_FLOPs_per_device / (peak_FLOP/s)
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / link_bw
+
+`compiled.cost_analysis()` reports per-device FLOPs / bytes (the SPMD
+partitioner has already divided the program). Collective bytes are NOT
+in cost_analysis: we parse the post-optimization HLO text
+(`compiled.as_text()`; collectives don't exist in the pre-partitioning
+StableHLO from `lowered.as_text()`) and sum, for every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, the
+largest tensor touched (≈ ring wire bytes for large N).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.configs.base import DeviceInfo
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_TENSOR_RE = re.compile(r"\b([a-z]\w*)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+[^=]*?\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(")
+
+
+def _tensor_bytes(dtype: str, dims: str) -> int:
+    bpe = _DTYPE_BYTES.get(dtype)
+    if bpe is None:
+        return 0
+    if not dims:
+        return bpe
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n * bpe
+
+
+def analyze_lowered(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Collective census of an HLO/StableHLO text dump."""
+    per_kind: Dict[str, Dict[str, float]] = {
+        k: {"count": 0, "bytes": 0.0} for k in COLLECTIVE_KINDS}
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        sizes = [_tensor_bytes(d, s) for d, s in _TENSOR_RE.findall(line)]
+        b = float(max(sizes)) if sizes else 0.0
+        per_kind[kind]["count"] += 1
+        per_kind[kind]["bytes"] += b
+        total += b
+    out: Dict[str, Dict[str, float]] = {
+        k: v for k, v in per_kind.items() if v["count"]}
+    out["total_bytes"] = total  # type: ignore[assignment]
+    return out
+
+
+def hlo_flops_bytes(cost_analysis) -> Dict[str, float]:
+    """Normalize compiled.cost_analysis() output."""
+    if isinstance(cost_analysis, (list, tuple)):
+        cost_analysis = cost_analysis[0]
+    out = {}
+    for k in ("flops", "bytes accessed", "transcendentals"):
+        if k in cost_analysis:
+            out[k.replace(" ", "_")] = float(cost_analysis[k])
+    # per-memory-space breakdown if present
+    for k, v in cost_analysis.items():
+        if k.startswith("bytes accessed") and k != "bytes accessed":
+            out[k.replace(" ", "_")] = float(v)
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops: float
+    useful_ratio: float        # MODEL_FLOPS / (HLO_FLOPs * chips)
+
+    def as_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+def analytic_roofline(record: Dict,
+                      device: Optional[DeviceInfo] = None) -> Dict[str, float]:
+    """Cost-model (scan-aware) roofline terms for a dry-run record.
+
+    XLA's cost_analysis counts a `while` body once, so for scan-over-
+    layers programs the raw HLO terms undercount by ~n_layers; these
+    analytic terms come from the operator description instead (exact
+    FLOP/byte counts for every matmul we emit) and are what the §Perf
+    dominance calls use. Raw HLO terms stay in the report for
+    comparison.
+    """
+    from repro.configs import get_arch, get_shape
+    from repro.core.cost_model import CostEnv, plan_cost, uniform_plan, ZDP
+    from repro.core.descriptions import describe, STATE_BYTES_PER_PARAM
+    from repro.configs.base import MULTI_POD_MESH, SINGLE_POD_MESH
+
+    device = device or DeviceInfo()
+    model = get_arch(record["arch"])
+    shape = get_shape(record["shape"])
+    mesh = MULTI_POD_MESH if record["mesh"].count("x") == 2 \
+        else SINGLE_POD_MESH
+    chips = mesh.n_devices
+    desc = describe(model, shape)
+    env = CostEnv(device, mesh, checkpointing=(shape.kind == "train"),
+                  train=(shape.kind == "train"))
+    tokens = shape.tokens if shape.kind != "decode" else shape.global_batch
+    mult = (3.0 if shape.kind == "train" else 1.0) * (
+        1.3 if shape.kind == "train" else 1.0)
+    flops_tok = sum(op.flops_per_token for op in desc.operators)
+    if model.is_moe:
+        pass  # flops_per_token already counts top-k only
+    compute_s = flops_tok * tokens * mult / chips / (
+        device.peak_flops * device.mxu_efficiency)
+    # memory traffic per step: read params (+ grads/opt in train) + acts
+    state = desc.total_params * (STATE_BYTES_PER_PARAM
+                                 if shape.kind == "train" else 2)
+    act_traffic = sum(op.act_bytes_per_token for op in desc.operators) \
+        * tokens * (2.0 if shape.kind == "train" else 1.0)
+    memory_s = (state + act_traffic) / chips / device.hbm_bw
+    # collective: evaluate the record's actual OSDP plan
+    from repro.core.cost_model import Decision
+    digest = record.get("plan", {})
+    decisions = {}
+    for name, modes in digest.items():
+        if modes.startswith("MIXED("):
+            decisions[name] = Decision(name, tuple(
+                modes[6:-1].split(",")))
+        else:
+            decisions[name] = Decision(name, (modes,))
+    if not decisions:
+        decisions = uniform_plan(desc, ZDP)
+    comm = plan_cost(desc, decisions, shape.global_batch, env).comm_time
+    return {"compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": comm}
+
+
+def roofline(record: Dict, device: Optional[DeviceInfo] = None,
+             n_chips: Optional[int] = None) -> RooflineTerms:
+    """Compute the three terms from a dry-run record (see launch.dryrun)."""
+    device = device or DeviceInfo()
+    mesh = record["mesh"]
+    chips = n_chips or math.prod(int(x) for x in mesh.split("x"))
+    cost = record.get("cost_analysis", {})
+    flops = cost.get("flops", 0.0)                  # per-device
+    bytes_acc = cost.get("bytes_accessed", 0.0)     # per-device
+    coll = record.get("collectives", {})
+    coll_bytes = coll.get("total_bytes", 0.0)       # per-device program
+
+    compute_s = flops / device.peak_flops
+    memory_s = bytes_acc / device.hbm_bw
+    collective_s = coll_bytes / device.ici_bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    # MODEL_FLOPS: 6 N D for training, 2 N D for inference fwd
+    n_active = record.get("active_params", record.get("params", 0))
+    tokens = record.get("tokens", 0)
+    mult = 6.0 if record.get("kind") == "train" else 2.0
+    model_flops = mult * n_active * tokens
+    hlo_total = flops * chips
+    ratio = model_flops / hlo_total if hlo_total else 0.0
+    return RooflineTerms(compute_s, memory_s, collective_s, dominant,
+                         model_flops, flops, ratio)

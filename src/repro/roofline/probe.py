@@ -1,0 +1,74 @@
+"""HLO probes for the §Perf hypothesis loop.
+
+Given compiled HLO text:
+  * `largest_tensors` — the top-k biggest buffers (what dominates temp),
+  * `collectives_by_scope` — collective ops inside vs outside `while`
+    bodies (a gather hoisted out of the layer scan materializes the
+    whole stacked weight: the §Perf-1 pathology),
+  * `count_op` — occurrences of an opcode (e.g. remat-duplicated ops).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+from repro.roofline.analysis import _DTYPE_BYTES, _TENSOR_RE, _OP_RE
+
+
+def _bytes(dtype: str, dims: str) -> int:
+    bpe = _DTYPE_BYTES.get(dtype, 0)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * bpe
+
+
+def largest_tensors(hlo: str, k: int = 12) -> List[Tuple[float, str]]:
+    seen: Dict[str, float] = {}
+    for line in hlo.splitlines():
+        line = line.strip()
+        if "=" not in line or line.startswith("//"):
+            continue
+        head = line.split("=", 1)[0].strip()
+        m = _TENSOR_RE.search(line.split("=", 1)[1])
+        if not m:
+            continue
+        b = _bytes(m.group(1), m.group(2))
+        if b:
+            seen[head[:80]] = max(seen.get(head[:80], 0), b)
+    top = sorted(seen.items(), key=lambda kv: -kv[1])[:k]
+    return [(v / 2**30, k_) for k_, v in top]
+
+
+def collectives_by_scope(hlo: str) -> Dict[str, Dict[str, float]]:
+    """Split the collective census into while-body vs entry scopes.
+
+    HLO text lists one computation per block: `%name (args) -> ... {`.
+    While bodies are computations referenced by `while(...)` ops; we
+    approximate scope by tracking the current computation and whether
+    its name contains 'while' / 'body' / 'cond' (XLA's naming).
+    """
+    scopes = {"in_loop": {"count": 0, "bytes": 0.0},
+              "top_level": {"count": 0, "bytes": 0.0}}
+    current_in_loop = False
+    for line in hlo.splitlines():
+        s = line.strip()
+        if s.startswith(("%", "ENTRY")) and s.endswith("{"):
+            name = s.split("(", 1)[0]
+            current_in_loop = ("while" in name or "body" in name
+                               or "scan" in name)
+            continue
+        m = _OP_RE.search(s)
+        if not m:
+            continue
+        sizes = [_bytes(d, dd) for d, dd in _TENSOR_RE.findall(s)]
+        b = float(max(sizes)) if sizes else 0.0
+        key = "in_loop" if current_in_loop else "top_level"
+        scopes[key]["count"] += 1
+        scopes[key]["bytes"] += b
+    return scopes
+
+
+def count_op(hlo: str, opcode: str) -> int:
+    return len(re.findall(rf"=\s+[^=]*?\b{re.escape(opcode)}\(", hlo))

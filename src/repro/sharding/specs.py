@@ -1,0 +1,272 @@
+"""Parameter layout + sharding spec machinery.
+
+Every model declares its parameters as `WeightSpec`s: shape, the TP
+(tensor-parallel, `model` axis) placement, the ZDP axis (which dim the
+OSDP plan may shard over `data`/`pod`), and the OSDP operator name the
+weight belongs to. `materialize` turns specs + an OSDP plan into:
+
+  * the param pytree (weights split into per-mode segments along the
+    ZDP axis when the plan mixes modes — paper §3.3 per-slice plans),
+  * a matching pytree of `NamedSharding`s,
+  * per-op segment metadata the model fwd uses (`SegLayout`).
+
+TP conventions (see DESIGN.md §6):
+  * column-parallel: output dim sharded over `model` (w_q, w13, embed^T)
+  * row-parallel: input dim sharded over `model`, output psum (w_o, w2)
+  * experts: expert axis over `model` (expert parallelism)
+  * small tensors (norms, biases, kv for replicated-kv GQA): no TP
+ZDP overlays `data` (ZDP mode) or nothing (DP) on `zdp_axis`; in the
+multi-pod mesh, ZDP uses ('pod','data') and ZDP_POD only 'data'.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.cost_model import DP, ZDP, ZDP_POD, Decision
+
+
+@dataclass(frozen=True)
+class WeightSpec:
+    """Declaration of one parameter tensor."""
+
+    path: str                       # pytree path, e.g. "layers/ffn/w13"
+    shape: Tuple[int, ...]
+    op: str                         # OSDP operator this weight belongs to
+    tp_axis: Optional[int] = None   # dim sharded over 'model' (None = no TP)
+    zdp_axis: Optional[int] = None  # dim OSDP may shard (None = always DP)
+    init: str = "normal"            # "normal" | "zeros" | "ones" | "ssm_a"
+    init_scale: float = 0.02
+    dtype: jnp.dtype = jnp.bfloat16
+    stacked: bool = False           # leading dim is the layer axis
+
+
+@dataclass
+class Segment:
+    """One contiguous slice of a weight along its ZDP axis."""
+
+    mode: str
+    start: int
+    size: int
+    key: str          # leaf name suffix ("" if single segment)
+
+
+@dataclass
+class SegLayout:
+    """Per-weight segmentation derived from the plan."""
+
+    spec: WeightSpec
+    segments: List[Segment]
+
+    @property
+    def is_split(self) -> bool:
+        return len(self.segments) > 1
+
+
+def _merge_modes(modes: Sequence[str], dim: int) -> List[Tuple[str, int, int]]:
+    """Merge adjacent equal-mode slices -> [(mode, start, size)].
+
+    The slice boundaries quantize `dim` into len(modes) near-equal
+    chunks, rounded to multiples of 128 where possible (MXU alignment).
+    """
+    g = len(modes)
+    bounds = [0]
+    for j in range(1, g):
+        b = round(dim * j / g)
+        if dim % 128 == 0 and dim // g >= 128:
+            b = round(b / 128) * 128
+        bounds.append(min(max(b, bounds[-1]), dim))
+    bounds.append(dim)
+    out: List[Tuple[str, int, int]] = []
+    for m, s, e in zip(modes, bounds[:-1], bounds[1:]):
+        if e <= s:
+            continue
+        if out and out[-1][0] == m:
+            pm, ps, psz = out[-1]
+            out[-1] = (pm, ps, psz + (e - s))
+        else:
+            out.append((m, s, e - s))
+    return out or [(modes[0], 0, dim)]
+
+
+def layout_for(spec: WeightSpec,
+               decision: Optional[Decision]) -> SegLayout:
+    modes = decision.modes if decision is not None else (DP,)
+    if spec.zdp_axis is None or len(modes) == 1:
+        mode = modes[0] if spec.zdp_axis is not None else DP
+        return SegLayout(spec, [Segment(mode, 0, spec.shape[spec.zdp_axis]
+                                        if spec.zdp_axis is not None
+                                        else 0, "")])
+    dim = spec.shape[spec.zdp_axis]
+    merged = _merge_modes(list(modes), dim)
+    if len(merged) == 1:
+        return SegLayout(spec, [Segment(merged[0][0], 0, dim, "")])
+    return SegLayout(spec, [Segment(m, s, z, f"@{i}")
+                            for i, (m, s, z) in enumerate(merged)])
+
+
+def _zdp_axes_names(mode: str, mesh: Mesh) -> Optional[Tuple[str, ...]]:
+    if mode == DP:
+        return None
+    if mode == ZDP:
+        return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if mode == ZDP_POD:
+        return ("data",)
+    raise ValueError(mode)
+
+
+def segment_sharding(spec: WeightSpec, seg: Segment, seg_shape: Tuple[int, ...],
+                     mesh: Mesh) -> NamedSharding:
+    parts: List[Optional[object]] = [None] * len(seg_shape)
+    if spec.tp_axis is not None:
+        parts[spec.tp_axis] = "model"
+    names = _zdp_axes_names(seg.mode, mesh)
+    if names is not None and spec.zdp_axis is not None:
+        n = math.prod(mesh.shape[a] for a in names)
+        if seg_shape[spec.zdp_axis] % n == 0:
+            parts[spec.zdp_axis] = names if len(names) > 1 else names[0]
+        elif (len(names) > 1
+              and seg_shape[spec.zdp_axis] % mesh.shape["data"] == 0):
+            parts[spec.zdp_axis] = "data"   # fall back to in-pod sharding
+        # else: leave replicated (divisibility guard; cost model's saving
+        # for this segment is then optimistic — flagged by tests)
+    return NamedSharding(mesh, P(*parts))
+
+
+def _init_array(key: jax.Array, spec: WeightSpec,
+                shape: Tuple[int, ...]) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(shape, spec.dtype)
+    if spec.init == "ssm_a":
+        # Mamba2 A init: -exp(U[log 1, log 16]) stored as log(-A)
+        u = jax.random.uniform(key, shape, jnp.float32,
+                               minval=math.log(1.0), maxval=math.log(16.0))
+        return u.astype(spec.dtype)
+    scale = spec.init_scale
+    if spec.init == "fan_in":
+        fan = shape[-2] if len(shape) >= 2 else shape[-1]
+        scale = 1.0 / math.sqrt(fan)
+    return (jax.random.normal(key, shape, jnp.float32) * scale
+            ).astype(spec.dtype)
+
+
+@dataclass
+class ParamSet:
+    """Materialized parameters + shardings + segmentation metadata."""
+
+    params: Dict[str, jax.Array]              # flat path -> array
+    shardings: Dict[str, NamedSharding]
+    layouts: Dict[str, SegLayout]              # weight path -> layout
+
+    def tree(self) -> Dict[str, jax.Array]:
+        return self.params
+
+    def sharding_tree(self) -> Dict[str, NamedSharding]:
+        return self.shardings
+
+    def segments(self, path: str) -> List[Tuple[str, Segment]]:
+        """[(leaf_key, segment)] for a declared weight path."""
+        lay = self.layouts[path]
+        return [(path + s.key, s) for s in lay.segments]
+
+    def n_params(self) -> int:
+        return sum(int(np.prod(a.shape)) for a in self.params.values())
+
+
+def seg_shape(spec: WeightSpec, seg: Segment) -> Tuple[int, ...]:
+    if spec.zdp_axis is None:
+        return spec.shape
+    shp = list(spec.shape)
+    shp[spec.zdp_axis] = seg.size
+    return tuple(shp)
+
+
+def build_param_set(specs: Sequence[WeightSpec],
+                    decisions: Optional[Dict[str, Decision]],
+                    mesh: Optional[Mesh],
+                    key: jax.Array,
+                    abstract: bool = False) -> ParamSet:
+    """Create params (or ShapeDtypeStructs if abstract) + shardings."""
+    params: Dict[str, jax.Array] = {}
+    shardings: Dict[str, NamedSharding] = {}
+    layouts: Dict[str, SegLayout] = {}
+    keys = jax.random.split(key, max(1, len(specs)))
+    for k, spec in zip(keys, specs):
+        dec = decisions.get(spec.op) if decisions else None
+        lay = layout_for(spec, dec)
+        layouts[spec.path] = lay
+        for seg in lay.segments:
+            shp = seg_shape(spec, seg)
+            leaf = spec.path + seg.key
+            if mesh is not None:
+                shardings[leaf] = segment_sharding(spec, seg, shp, mesh)
+            if abstract:
+                params[leaf] = jax.ShapeDtypeStruct(shp, spec.dtype)
+            else:
+                params[leaf] = _init_array(k, spec, shp)
+    return ParamSet(params, shardings, layouts)
+
+
+# --- helpers used by model forward passes -----------------------------------
+
+def gather_weight(params: Dict[str, jax.Array], pset: ParamSet,
+                  path: str) -> jax.Array:
+    """Concatenate a weight's segments back (for ops that don't exploit
+    sequential slice processing). Axis accounts for the layer axis being
+    consumed when called inside the scan-over-layers body."""
+    segs = pset.segments(path)
+    if len(segs) == 1:
+        return params[segs[0][0]]
+    spec = pset.layouts[path].spec
+    axis = spec.zdp_axis
+    if spec.stacked and params[segs[0][0]].ndim == len(spec.shape) - 1:
+        axis -= 1
+    return jnp.concatenate([params[k] for k, _ in segs], axis=axis)
+
+
+def seg_matmul(x: jax.Array, params: Dict[str, jax.Array], pset: ParamSet,
+               path: str, in_axis_in_weight: int) -> jax.Array:
+    """Operator splitting (§3.3) over per-mode segments.
+
+    If the split axis is the weight's *input* (contraction) dim — the
+    paper's Figure 4 case — segments are processed sequentially and
+    summed: y = sum_j x[..., slice_j] @ W_j. If it is the *output* dim
+    (row-parallel weights, whose input dim is TP-owned), segment outputs
+    are computed sequentially and concatenated. Either way only one
+    gathered slice is live at a time. `in_axis_in_weight` counts within
+    the per-layer weight (excluding a stacked layer axis).
+    """
+    segs = pset.segments(path)
+    spec = pset.layouts[path].spec
+    if len(segs) == 1:
+        return _contract(x, params[segs[0][0]], in_axis_in_weight)
+    zdp_local = spec.zdp_axis - (1 if spec.stacked else 0)
+    if zdp_local == in_axis_in_weight:
+        # sum variant (input-dim split, Figure 4)
+        y = None
+        off = 0
+        for leaf, seg in segs:
+            xs = jax.lax.dynamic_slice_in_dim(x, off, seg.size, axis=-1)
+            part = _contract(xs, params[leaf], in_axis_in_weight)
+            y = part if y is None else y + part
+            off += seg.size
+        return y
+    # concat variant (output-dim split)
+    parts = [_contract(x, params[leaf], in_axis_in_weight)
+             for leaf, _ in segs]
+    return jnp.concatenate(parts, axis=-1)
+
+
+def _contract(x: jax.Array, w: jax.Array, in_axis: int) -> jax.Array:
+    if w.ndim == 2 and in_axis == 0:
+        return x @ w
+    return jnp.tensordot(x, w, axes=((x.ndim - 1,), (in_axis,)))

@@ -1,0 +1,143 @@
+"""Training loop: jit-compiled step with OSDP shardings + microbatching.
+
+`make_train_step(built, ...)` returns (step_fn, init_fn) where step_fn
+is `jit(step, in_shardings=..., out_shardings=..., donate...)` — the
+same callable the dry-run lowers for the production meshes and the
+smoke tests execute on CPU.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import io as ckpt_io
+from repro.configs.base import RunConfig
+from repro.data.synthetic import Dataset
+from repro.models.registry import Built, input_shardings
+from repro.optim import (AdamWConfig, AdamWState, apply_update, init_state,
+                         state_shardings, warmup_cosine)
+
+
+def loss_and_grads(model, params, batch, microbatch: int = 0):
+    """Optionally microbatched (gradient-accumulated) value+grad."""
+    if microbatch <= 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    n = microbatch
+    split = lambda x: x.reshape(n, x.shape[0] // n, *x.shape[1:])
+    mb = jax.tree.map(split, batch)
+
+    def body(carry, b):
+        acc_loss, acc_grads = carry
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(params, b)
+        acc_grads = jax.tree.map(jnp.add, acc_grads, grads)
+        return (acc_loss + loss, acc_grads), metrics
+
+    zero_grads = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+    (loss, grads), metrics = jax.lax.scan(body, (jnp.zeros(()), zero_grads),
+                                          mb)
+    grads = jax.tree.map(lambda g: g / n, grads)
+    last = jax.tree.map(lambda m: m[-1], metrics)
+    return loss / n, last, grads
+
+
+def make_train_step(built: Built, opt_cfg: Optional[AdamWConfig] = None,
+                    total_steps: int = 10_000, warmup: int = 100,
+                    donate: bool = True) -> Tuple[Callable, Callable]:
+    opt_cfg = opt_cfg or AdamWConfig()
+    model = built.model
+    run = built.run
+    micro = run.microbatch
+
+    def step(params, opt_state: AdamWState, batch):
+        loss, metrics, grads = loss_and_grads(model, params, batch, micro)
+        lr_scale = warmup_cosine(opt_state.step + 1, warmup, total_steps)
+        params, opt_state, opt_metrics = apply_update(
+            opt_cfg, params, grads, opt_state, lr_scale)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    if built.mesh is None:
+        def init(key):
+            params = built.init(key)
+            return params, init_state(params)
+        return jax.jit(step, donate_argnums=(0, 1) if donate else ()), init
+
+    mesh = built.mesh
+    psh = built.shardings
+    repl = NamedSharding(mesh, P())
+    osh = state_shardings(psh, repl)
+
+    def init(key):
+        params = built.init(key)
+        params = {k: jax.device_put(v, psh[k]) for k, v in params.items()}
+        opt = init_state(params)
+        opt = jax.tree.map(jax.device_put, opt, osh)
+        return params, opt
+    # batch shardings ride on the input ShapeDtypeStructs / arrays
+    step_jit = jax.jit(
+        step,
+        in_shardings=(psh, osh, None),
+        out_shardings=(psh, osh, None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return step_jit, init
+
+
+@dataclass
+class TrainResult:
+    steps: int
+    losses: list
+    tokens_per_s: float
+    final_metrics: Dict[str, float] = field(default_factory=dict)
+
+
+def train(built: Built, n_steps: int, *, seed: int = 0,
+          opt_cfg: Optional[AdamWConfig] = None,
+          ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
+          log_every: int = 10, batch_override: Optional[int] = None,
+          seq_override: Optional[int] = None, warmup: int = 100,
+          total_steps: int = 10_000,
+          print_fn=print) -> TrainResult:
+    """Single-host training driver (CPU smoke / example scale)."""
+    step_fn, init_fn = make_train_step(built, opt_cfg, warmup=warmup,
+                                       total_steps=total_steps)
+    params, opt_state = init_fn(jax.random.PRNGKey(seed))
+    ds = Dataset(built.run.model, built.run.shape, seed=seed)
+    start_step = 0
+    if ckpt_dir and ckpt_io.latest_step(ckpt_dir) is not None:
+        (params, opt_state), start_step = ckpt_io.restore(
+            ckpt_dir, (params, opt_state))
+        print_fn(f"restored checkpoint at step {start_step}")
+
+    losses = []
+    t0 = time.perf_counter()
+    tokens = 0
+    for s in range(start_step, start_step + n_steps):
+        batch = {k: jnp.asarray(v) for k, v in ds.global_batch(
+            s, batch=batch_override, seq=seq_override).items()}
+        tokens += int(np.prod(batch["labels"].shape))
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if log_every and (s % log_every == 0 or s == start_step + n_steps - 1):
+            print_fn(f"step {s:5d} loss {loss:.4f} "
+                     f"gnorm {float(metrics['grad_norm']):.3f}")
+        if ckpt_dir and ckpt_every and (s + 1) % ckpt_every == 0:
+            ckpt_io.save(ckpt_dir, s + 1, (params, opt_state))
+    dt = time.perf_counter() - t0
+    if ckpt_dir:
+        ckpt_io.save(ckpt_dir, start_step + n_steps, (params, opt_state))
+    return TrainResult(n_steps, losses, tokens / dt,
+                       {k: float(v) for k, v in metrics.items()})

@@ -1,0 +1,48 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the single
+real CPU device; only launch/dryrun.py forces 512 host devices."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import (MeshConfig, OSDPConfig, RunConfig, get_arch,
+                           get_shape, reduced)
+
+HOST_MESH = MeshConfig((1, 1), ("data", "model"))
+
+
+def tiny_run(arch: str, *, seq: int = 64, batch: int = 2,
+             shape: str = "train_4k", osdp: OSDPConfig = None) -> RunConfig:
+    cfg = reduced(get_arch(arch))
+    shp = dataclasses.replace(get_shape(shape), seq_len=seq,
+                              global_batch=batch)
+    return RunConfig(model=cfg, shape=shp, mesh=HOST_MESH,
+                     osdp=osdp or OSDPConfig(enabled=False))
+
+
+def make_batch(cfg, B, S, key=0):
+    k = jax.random.PRNGKey(key)
+    import jax.numpy as jnp
+    if cfg.family == "audio":
+        return {
+            "frames": jax.random.normal(k, (B, S, cfg.d_model), jnp.bfloat16),
+            "mask": jax.random.bernoulli(k, 0.3, (B, S)),
+            "labels": jax.random.randint(k, (B, S), 0, cfg.vocab_size),
+        }
+    if cfg.family == "vlm":
+        P = min(16, S // 2)
+        st = S - P
+        pos = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None, :, None], (B, S, 3))
+        return {
+            "tokens": jax.random.randint(k, (B, st), 0, cfg.vocab_size),
+            "patches": jax.random.normal(k, (B, P, cfg.d_model),
+                                         jnp.bfloat16),
+            "positions": pos,
+            "labels": jax.random.randint(k, (B, st), 0, cfg.vocab_size),
+        }
+    return {
+        "tokens": jax.random.randint(k, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(k, (B, S), 0, cfg.vocab_size),
+    }

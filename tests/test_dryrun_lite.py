@@ -1,0 +1,28 @@
+"""Dry-run smoke (deliverable e, CI-sized): lower+compile a small but
+real subset of (arch x shape x mesh) combos in a subprocess with the
+512-device flag — one per step kind plus one multi-pod."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+COMBOS = [
+    ("qwen1.5-0.5b", "train_4k", []),
+    ("mamba2-2.7b", "long_500k", []),
+    ("dbrx-132b", "decode_32k", []),
+    ("hubert-xlarge", "prefill_32k", ["--multi-pod"]),
+]
+
+
+@pytest.mark.parametrize("arch,shape,extra", COMBOS)
+def test_dryrun_combo(arch, shape, extra):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape] + extra,
+        capture_output=True, text=True, env=env, timeout=540)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "0 failed" in r.stdout, r.stdout[-2000:]

@@ -1,0 +1,45 @@
+"""CLI integration tests: the train / serve launchers end-to-end."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+def _run(args, timeout=420):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    return subprocess.run([sys.executable, "-m"] + args,
+                          capture_output=True, text=True, env=env,
+                          timeout=timeout)
+
+
+def test_train_cli_reduced():
+    r = _run(["repro.launch.train", "--arch", "qwen1.5-0.5b", "--reduced",
+              "--steps", "8", "--seq", "64", "--batch", "4",
+              "--warmup", "2"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "done: 8 steps" in r.stdout, r.stdout[-500:]
+    assert "plan[" in r.stdout          # OSDP pipeline ran
+
+
+def test_train_cli_force_zdp():
+    r = _run(["repro.launch.train", "--arch", "mamba2-2.7b", "--reduced",
+              "--steps", "4", "--seq", "32", "--batch", "2",
+              "--force-mode", "ZDP", "--warmup", "2"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "done: 4 steps" in r.stdout
+
+
+def test_serve_cli():
+    r = _run(["repro.launch.serve", "--arch", "hymba-1.5b", "--reduced",
+              "--batch", "2", "--prompt-len", "32", "--new-tokens", "8"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "decoded 8 tokens" in r.stdout, r.stdout[-500:]
+
+
+def test_serve_cli_rejects_encoder():
+    r = _run(["repro.launch.serve", "--arch", "hubert-xlarge", "--reduced"])
+    assert r.returncode == 1
+    assert "encoder-only" in r.stdout

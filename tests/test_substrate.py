@@ -1,0 +1,164 @@
+"""Data pipeline / checkpoint / serving / roofline-parser tests."""
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch, tiny_run
+from repro.checkpoint import io as ckpt_io
+from repro.configs import get_arch, get_shape, reduced
+from repro.data.synthetic import Dataset, mrope_positions
+from repro.models.registry import build_model
+from repro.roofline.analysis import analyze_lowered, roofline
+from repro.serving.engine import Engine
+from repro.train.loop import train
+
+
+# --- data ---------------------------------------------------------------------
+
+def test_dataset_deterministic():
+    cfg = reduced(get_arch("phi4-mini-3.8b"))
+    shape = dataclasses.replace(get_shape("train_4k"), seq_len=64,
+                                global_batch=4)
+    ds = Dataset(cfg, shape, seed=7)
+    a = ds.global_batch(3)
+    b = ds.global_batch(3)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    c = ds.global_batch(4)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_dataset_host_sharding_covers_global():
+    cfg = reduced(get_arch("phi4-mini-3.8b"))
+    shape = dataclasses.replace(get_shape("train_4k"), seq_len=32,
+                                global_batch=8)
+    ds = Dataset(cfg, shape)
+    g = ds.global_batch(0)
+    parts = [ds.host_batch(0, h, 4) for h in range(4)]
+    re = np.concatenate([p["tokens"] for p in parts], axis=0)
+    np.testing.assert_array_equal(re, g["tokens"])
+
+
+def test_dataset_labels_are_next_token():
+    cfg = reduced(get_arch("qwen1.5-0.5b"))
+    shape = dataclasses.replace(get_shape("train_4k"), seq_len=16,
+                                global_batch=2)
+    b = Dataset(cfg, shape).global_batch(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_audio_batch_masks_labels():
+    cfg = reduced(get_arch("hubert-xlarge"))
+    shape = dataclasses.replace(get_shape("train_4k"), seq_len=64,
+                                global_batch=2)
+    b = Dataset(cfg, shape).global_batch(0)
+    assert b["frames"].shape == (2, 64, cfg.d_model)
+    assert ((b["labels"] >= 0) == b["mask"]).all()
+
+
+def test_mrope_positions_grid():
+    pos = mrope_positions(1, 16, 8)
+    assert pos.shape == (1, 24, 3)
+    # patches share t=0, text is diagonal
+    assert (pos[0, :16, 0] == 0).all()
+    assert (pos[0, 16:, 0] == pos[0, 16:, 1]).all()
+
+
+# --- checkpoint -----------------------------------------------------------------
+
+def test_checkpoint_roundtrip_exact():
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nested": {"b": jnp.ones((4,), jnp.bfloat16) * 1.5,
+                   "c": jnp.array(3, jnp.int32)},
+        "tup": (jnp.zeros((2,)), jnp.ones((2,), jnp.float64)
+                if jax.config.read("jax_enable_x64") else jnp.ones((2,))),
+    }
+    with tempfile.TemporaryDirectory() as d:
+        ckpt_io.save(d, 12, tree)
+        assert ckpt_io.latest_step(d) == 12
+        got, step = ckpt_io.restore(d, tree)
+        assert step == 12
+        flat_a = jax.tree.leaves(tree)
+        flat_b = jax.tree.leaves(got)
+        for x, y in zip(flat_a, flat_b):
+            np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                          np.asarray(y, np.float32))
+
+
+def test_checkpoint_resume_continues_training():
+    run = tiny_run("qwen1.5-0.5b", batch=4)
+    built = build_model(run)
+    with tempfile.TemporaryDirectory() as d:
+        r1 = train(built, 4, ckpt_dir=d, log_every=0, warmup=2)
+        assert ckpt_io.latest_step(d) == 4
+        r2 = train(built, 2, ckpt_dir=d, log_every=0, warmup=2)
+        assert ckpt_io.latest_step(d) == 6
+
+
+# --- serving --------------------------------------------------------------------
+
+def test_engine_greedy_deterministic():
+    run = tiny_run("qwen1.5-0.5b", shape="decode_32k")
+    built = build_model(run)
+    params = built.init(jax.random.PRNGKey(0))
+    eng = Engine(built, params)
+    prompts = np.random.default_rng(0).integers(
+        0, run.model.vocab_size, (2, 16)).astype(np.int32)
+    a = eng.generate(prompts, 6).tokens
+    b = eng.generate(prompts, 6).tokens
+    np.testing.assert_array_equal(a, b)
+    assert (a >= 0).all() and (a < run.model.vocab_size).all()
+
+
+def test_engine_rejects_encoder_only():
+    run = tiny_run("hubert-xlarge")
+    built = build_model(run)
+    params = built.init(jax.random.PRNGKey(0))
+    eng = Engine(built, params)
+    with pytest.raises(AssertionError):
+        eng.generate(np.zeros((1, 4), np.int32), 1)
+
+
+# --- roofline parser ------------------------------------------------------------
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %ag = bf16[16,2048]{1,0} all-gather(bf16[16,128]{1,0} %p), dimensions={1}
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %g), to_apply=%add
+  %rs.1 = f32[64]{0} reduce-scatter(f32[1024]{0} %g2), dimensions={0}
+  %a2a = bf16[8,32]{1,0} all-to-all(bf16[8,32]{1,0} %x), dimensions={0}
+  %agx-start = bf16[4,8]{1,0} all-gather-start(bf16[4,4]{1,0} %q)
+  %fusion.all-gather-like = f32[2]{0} add(f32[2]{0} %a, f32[2]{0} %b)
+}
+"""
+
+
+def test_analyze_lowered_counts_and_bytes():
+    got = analyze_lowered(HLO_SAMPLE)
+    assert got["all-gather"]["count"] == 2      # bare + -start
+    assert got["all-reduce"]["count"] == 1
+    assert got["reduce-scatter"]["count"] == 1
+    assert got["all-to-all"]["count"] == 1
+    assert got["all-gather"]["bytes"] == 16 * 2048 * 2 + 4 * 8 * 2
+    assert got["reduce-scatter"]["bytes"] == 1024 * 4
+    assert got["total_bytes"] == sum(
+        v["bytes"] for k, v in got.items() if k != "total_bytes")
+
+
+def test_roofline_terms_dominant():
+    rec = {
+        "mesh": "16x16", "kind": "train", "params": 1e9,
+        "active_params": 1e9, "tokens": 1e6,
+        "cost_analysis": {"flops": 1e15, "bytes_accessed": 1e9},
+        "collectives": {"total_bytes": 1e10},
+    }
+    t = roofline(rec)
+    assert t.dominant == "compute"
+    assert t.compute_s == pytest.approx(1e15 / 197e12)
+    assert t.collective_s == pytest.approx(1e10 / 50e9)
