@@ -228,6 +228,13 @@ class MeshConfig:
         return 1
 
     @property
+    def pipeline_parallel(self) -> int:
+        for s, a in zip(self.shape, self.axes):
+            if a == "pipe":
+                return s
+        return 1
+
+    @property
     def multi_pod(self) -> bool:
         return "pod" in self.axes
 

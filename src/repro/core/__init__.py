@@ -1,10 +1,15 @@
 """OSDP core: the paper's contribution as a composable JAX module."""
-from repro.core.api import dp_baseline, fsdp_baseline, osdp  # noqa: F401
+from repro.core.api import (  # noqa: F401
+    dp_baseline, fsdp_baseline, osdp, search_hybrid)
 from repro.core.cost_model import (  # noqa: F401
     DP, ZDP, ZDP_POD, CostEnv, Decision, OpCost, PlanCost, op_cost,
     plan_cost, uniform_plan, zdp_extra_time, zdp_saving)
 from repro.core.descriptions import (  # noqa: F401
     ModelDescription, OperatorDesc, describe, sanity_check)
+from repro.core.hybrid import (  # noqa: F401
+    Factorization, HybridPlan, factorizations, hybrid_step_time,
+    pp_bubble_fraction, slice_description, stage_bounds,
+    tp_activation_time)
 from repro.core.operator_split import chunked_ffn, chunked_matmul  # noqa: F401
 from repro.core.plan import Plan, make_plan  # noqa: F401
 from repro.core.search import (  # noqa: F401

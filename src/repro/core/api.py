@@ -12,12 +12,15 @@ data parallelism — the baselines the paper compares against.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence, Union
 
 from repro.configs.base import (DeviceInfo, MeshConfig, ModelConfig,
                                 OSDPConfig, RunConfig, ShapeConfig,
                                 SINGLE_POD_MESH)
+from repro.core.descriptions import ModelDescription, describe
+from repro.core.hybrid import Factorization, HybridPlan
 from repro.core.plan import Plan, make_plan
+from repro.core import search as _search
 
 
 def osdp(model: ModelConfig,
@@ -43,6 +46,58 @@ def osdp(model: ModelConfig,
     )
     run = RunConfig(model=model, shape=shape, mesh=mesh, osdp=cfg)
     return make_plan(run, device)
+
+
+def search_hybrid(model: Union[ModelConfig, ModelDescription],
+                  shape: Optional[ShapeConfig] = None,
+                  *,
+                  n_devices: int,
+                  memory_limit_gib: float = 16.0,
+                  device: Optional[DeviceInfo] = None,
+                  search: str = "dfs",
+                  operator_splitting: bool = True,
+                  slice_granularity: int = 4,
+                  checkpointing: bool = True,
+                  force_mode: Optional[str] = None,
+                  micro: int = 8,
+                  max_tp: int = 0,
+                  max_pp: int = 0,
+                  batch_candidates: Optional[Sequence[int]] = None,
+                  candidates: Optional[Sequence[Factorization]] = None,
+                  ) -> HybridPlan:
+    """Search the hybrid 3D(+OSDP) plan space (paper Fig. 5/6 rows).
+
+    Sweeps the (dp, tp, pp) factorizations of `n_devices`; inside
+    each, the DP dimension runs the OSDP Scheduler (Algorithm 1) over
+    the per-device model residue — or a forced uniform mode:
+    `force_mode="ZDP"` is plain DeepSpeed-style 3D, `force_mode="DP"`
+    TP/PP with replicated data parallelism.  The default (no force) is
+    the paper's strongest configuration, 3D+OSDP.
+
+    `model` may be a ModelConfig (paired with `shape`) or a prebuilt
+    ModelDescription (e.g. the per-layer inconsistent models of the
+    paper's I&C family).
+    """
+    if isinstance(model, ModelDescription):
+        desc = model
+    else:
+        if shape is None:
+            raise TypeError("shape is required when model is a ModelConfig")
+        desc = describe(model, shape)
+    cfg = OSDPConfig(
+        enabled=True,
+        memory_limit_bytes=memory_limit_gib * 2**30,
+        search=search,
+        operator_splitting=operator_splitting,
+        default_slice_granularity=slice_granularity,
+        allow_pod_hierarchical=False,
+        checkpointing=checkpointing,
+        force_mode=force_mode,
+    )
+    return _search.search_hybrid(
+        desc, device or DeviceInfo(), n_devices, cfg,
+        batch_candidates=batch_candidates, micro=micro,
+        candidates=candidates, max_tp=max_tp, max_pp=max_pp)
 
 
 def fsdp_baseline(model: ModelConfig, shape: ShapeConfig,

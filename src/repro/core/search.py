@@ -22,15 +22,20 @@ all-ZDP+split plan exceeds the limit, keeping the throughput-argmax
 """
 from __future__ import annotations
 
+import dataclasses
 import time as _time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.configs.base import OSDPConfig
+from repro.configs.base import DeviceInfo, MeshConfig, OSDPConfig
 from repro.core.cost_model import (DP, ZDP, ZDP_POD, CostEnv, Decision,
                                    PlanCost, plan_cost, uniform_plan,
                                    zdp_extra_time, zdp_saving)
 from repro.core.descriptions import ModelDescription, OperatorDesc
+from repro.core.hybrid import (Factorization, HybridPlan, factorizations,
+                               hybrid_step_time, pp_boundary_time,
+                               slice_description, stage_bounds,
+                               tp_activation_time)
 
 
 @dataclass
@@ -300,8 +305,10 @@ def search_plan(desc: ModelDescription, global_batch: int, env: CostEnv,
             desc, osdp.force_mode,
             osdp.default_slice_granularity if osdp.operator_splitting else 1)
         cost = plan_cost(desc, dec, global_batch, env)
+        # feasibility is judged on steady memory, same as the searched
+        # path below (transient peaks stay visible in cost.peak_memory)
         return SearchResult(dec, cost, global_batch,
-                            cost.peak_memory <= osdp.memory_limit_bytes,
+                            cost.memory <= osdp.memory_limit_bytes,
                             f"forced:{osdp.force_mode}",
                             _time.perf_counter() - t0)
 
@@ -390,3 +397,121 @@ def _default_batches(max_batch: int, env: CostEnv) -> List[int]:
         out.append(b)
         b += n
     return out or [n]
+
+
+# ---------------------------------------------------------------------------
+# Hybrid Scheduler: (dp, tp, pp) factorization sweep ("3D+OSDP")
+# ---------------------------------------------------------------------------
+
+def search_hybrid(desc: ModelDescription, device: DeviceInfo,
+                  n_devices: int, osdp: OSDPConfig,
+                  batch_candidates: Optional[Sequence[int]] = None,
+                  micro: int = 8,
+                  candidates: Optional[Sequence[Factorization]] = None,
+                  max_tp: int = 0, max_pp: int = 0) -> HybridPlan:
+    """The paper's strongest configuration, "3D+OSDP", as a search.
+
+    Sweeps every (dp, tp, pp) factorization of `n_devices` (or the
+    given `candidates`); inside each, the DP dimension of the
+    1/(tp*pp) model residue is decided by the existing Scheduler —
+    i.e. the dfs/knapsack/greedy solvers, or a forced uniform mode
+    when `osdp.force_mode` is set (force_mode="ZDP" reproduces plain
+    DeepSpeed-style 3D; no force is 3D+OSDP).  Returns the global
+    throughput argmax as a `HybridPlan`.
+
+    When the OSDP search is on with operator splitting, the unsplit
+    search runs as well and the better of the two is kept (splitting
+    trades smaller transient gathers for extra collective latency, so
+    neither dominates — same policy as the fig5 benchmark).
+    """
+    t0 = _time.perf_counter()
+    if candidates is None:
+        candidates = factorizations(n_devices, max_tp, max_pp)
+    seq = desc.shape.seq_len
+    batches = (list(batch_candidates) if batch_candidates is not None
+               else [desc.shape.global_batch])
+    n_layers = max(1, desc.model.n_layers)
+
+    best: Optional[HybridPlan] = None
+    fallback: Optional[HybridPlan] = None   # min-memory infeasible plan
+    swept: List[Tuple[Factorization, float]] = []
+
+    for f in candidates:
+        # explicit candidates may undersubscribe the environment (e.g.
+        # GPipe over 8 of 16 devices); only pp > layers is inadmissible
+        if f.pp > n_layers:
+            continue
+        sub = slice_description(desc, f.tp, f.pp)
+        env = CostEnv(device, MeshConfig((f.dp, 1), ("data", "model")),
+                      checkpointing=osdp.checkpointing, include_tp=False)
+        variants = [osdp]
+        if osdp.force_mode is None and osdp.operator_splitting:
+            variants.append(dataclasses.replace(
+                osdp, operator_splitting=False))
+        local: Optional[HybridPlan] = None
+        for cfg in variants:
+            res = schedule(sub, env, cfg, batch_candidates=batches)
+            t = hybrid_step_time(res.cost.time, desc, device,
+                                 res.batch_size, f, micro)
+            plan = _as_hybrid_plan(desc, device, f, res, t, micro, cfg)
+            if not res.feasible:
+                if fallback is None or (plan.cost.memory
+                                        < fallback.cost.memory):
+                    fallback = plan
+                continue
+            if local is None or plan.cost.throughput > local.cost.throughput:
+                local = plan
+        if local is None:
+            continue
+        swept.append((f, local.cost.throughput))
+        if best is None or local.cost.throughput > best.cost.throughput:
+            best = local
+
+    if best is None:
+        if fallback is None:
+            # every candidate inadmissible (e.g. pp > n_layers for a
+            # forced factorization): report an infeasible placeholder
+            # rather than raise — same contract as the flat Scheduler.
+            cands = list(candidates)
+            if not cands:
+                raise ValueError(
+                    f"no factorization candidates for {n_devices} devices")
+            f = cands[0]
+            inf = float("inf")
+            best = HybridPlan(
+                desc=desc, device=device, factorization=f,
+                stage_bounds=stage_bounds(desc.model.n_layers, f.pp),
+                decisions={}, cost=PlanCost(inf, inf, inf, 0.0, 0.0, 0.0),
+                batch_size=batches[0], micro=micro, feasible=False,
+                dp_strategy="inadmissible", inner=None)
+        else:
+            best = fallback
+    best.swept = swept
+    if best.inner is not None:
+        best.inner.search_seconds = _time.perf_counter() - t0
+    return best
+
+
+def _as_hybrid_plan(desc: ModelDescription, device: DeviceInfo,
+                    f: Factorization, res: SearchResult, t: float,
+                    micro: int, cfg: OSDPConfig) -> HybridPlan:
+    b_local = max(1, res.batch_size // f.dp)
+    tp_t = tp_activation_time(desc, device, b_local, f.tp)
+    pp_t = pp_boundary_time(desc, device, b_local, f.pp, micro)
+    tokens = res.batch_size * desc.shape.seq_len
+    cost = PlanCost(
+        memory=res.cost.memory, peak_memory=res.cost.peak_memory,
+        time=t, comm_time=res.cost.comm_time + tp_t + pp_t,
+        compute_time=res.cost.compute_time,
+        throughput=tokens / t if t > 0 else 0.0)
+    strategy = (f"forced:{cfg.force_mode}" if cfg.force_mode
+                else cfg.search + ("" if cfg.operator_splitting
+                                   else "/nosplit"))
+    return HybridPlan(
+        desc=desc, device=device, factorization=f,
+        stage_bounds=stage_bounds(desc.model.n_layers, f.pp),
+        decisions=res.decisions, cost=cost, batch_size=res.batch_size,
+        micro=micro, feasible=res.feasible, dp_strategy=strategy,
+        inner=res)
+
+

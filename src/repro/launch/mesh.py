@@ -25,6 +25,16 @@ def make_mesh_from_config(cfg: MeshConfig):
     return jax.make_mesh(cfg.shape, cfg.axes)
 
 
+def make_hybrid_mesh(plan_or_factorization):
+    """3-axis (data, model, pipe) mesh for a HybridPlan / Factorization.
+
+    Accepts a `core.hybrid.HybridPlan`, a `core.hybrid.Factorization`,
+    or anything else exposing `.mesh_config()`.
+    """
+    cfg = plan_or_factorization.mesh_config()
+    return jax.make_mesh(cfg.shape, cfg.axes)
+
+
 def make_host_mesh():
     """1x1 mesh on the real local device (smoke tests / examples)."""
     return jax.make_mesh((1, 1), ("data", "model"))

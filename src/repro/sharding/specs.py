@@ -216,6 +216,63 @@ def build_param_set(specs: Sequence[WeightSpec],
     return ParamSet(params, shardings, layouts)
 
 
+# --- hybrid 3D meshes (data x model x pipe) ----------------------------------
+#
+# A HybridPlan executes on a 3-axis mesh: `data` carries the DP/ZDP
+# decisions exactly as above, `model` carries TP, and `pipe` carries
+# the GPipe stages. The pipe axis never appears in a weight's
+# PartitionSpec — each stage materializes only its own layer slice
+# (below), so `segment_sharding` applies unchanged on the hybrid mesh
+# (ZDP resolves to ('data',) since hybrid meshes have no 'pod' axis).
+
+def hybrid_mesh_spec(dp: int, tp: int, pp: int):
+    """(shape, axes) of the 3-axis hybrid mesh for jax.make_mesh."""
+    from repro.core.hybrid import Factorization
+    cfg = Factorization(dp, tp, pp).mesh_config()
+    return cfg.shape, cfg.axes
+
+
+def stage_of_layer(layer: int, bounds: Sequence[int]) -> int:
+    """Pipeline stage owning `layer` under HybridPlan.stage_bounds."""
+    for s in range(len(bounds) - 1):
+        if bounds[s] <= layer < bounds[s + 1]:
+            return s
+    raise ValueError(f"layer {layer} outside stage bounds {bounds}")
+
+
+def stage_weight_specs(specs: Sequence[WeightSpec],
+                       bounds: Sequence[int],
+                       stage: int) -> List[WeightSpec]:
+    """The per-stage view of a weight list for pipeline execution.
+
+    Stacked weights (leading layer axis) shrink to the stage's layer
+    range; unstacked weights follow the usual GPipe placement —
+    embeddings on the first stage, head/final-norm on the last. When
+    embeddings are tied (no separate head weight in the list), the
+    embedding is also placed on the last stage so it can project
+    logits there.
+    """
+    n_stages = len(bounds) - 1
+    last = n_stages - 1
+    lo, hi = bounds[stage], bounds[stage + 1]
+    tied = not any(s.path.startswith("head") for s in specs
+                   if not s.stacked)
+    out: List[WeightSpec] = []
+    for spec in specs:
+        if spec.stacked:
+            n = hi - lo
+            if n <= 0:
+                continue
+            shp = (n,) + tuple(spec.shape[1:])
+            out.append(dataclasses.replace(spec, shape=shp))
+        elif spec.path.startswith("embed"):
+            if stage == 0 or (tied and stage == last):
+                out.append(spec)
+        elif stage == last:
+            out.append(spec)
+    return out
+
+
 # --- helpers used by model forward passes -----------------------------------
 
 def gather_weight(params: Dict[str, jax.Array], pset: ParamSet,

@@ -1,0 +1,234 @@
+"""Hybrid 3D(+OSDP) search: factorization sweep, TP/PP cost terms,
+HybridPlan plumbing, and the paper's 3D+OSDP >= 3D claim."""
+import math
+
+import pytest
+
+from repro.configs import DeviceInfo, MeshConfig, OSDPConfig, ShapeConfig
+from repro.configs.base import DENSE, ModelConfig
+from repro.core.cost_model import DP, ZDP, CostEnv
+from repro.core.descriptions import describe
+from repro.core.hybrid import (Factorization, HybridPlan, factorizations,
+                               hybrid_step_time, pp_bubble_fraction,
+                               slice_description, stage_bounds,
+                               tp_activation_time)
+from repro.core.search import search_hybrid as search_hybrid_core
+from repro.sharding.specs import (WeightSpec, stage_of_layer,
+                                  stage_weight_specs)
+
+# the paper's Fig. 5 environment: one server, 8 RTX TITAN over PCIe3
+# (mirrors benchmarks/paper_models.py, which tests cannot import)
+RTX_TITAN_8 = DeviceInfo(
+    name="8x-rtx-titan-pcie3", peak_flops=65e12, hbm_bytes=24 * 2**30,
+    hbm_bw=672e9, ici_bw=12e9, dci_bw=12e9, alpha=5e-6,
+    mxu_efficiency=0.45)
+
+
+def _gpt(name, layers, hidden):
+    heads = max(8, hidden // 64)
+    return ModelConfig(
+        name=name, family=DENSE, n_layers=layers, d_model=hidden,
+        n_heads=heads, n_kv_heads=heads, d_ff=4 * hidden,
+        vocab_size=50257, act="gelu", norm="layernorm", rope="none",
+        tie_embeddings=True)
+
+
+ND_48 = _gpt("nd-48x1024", 48, 1024)
+PAPER_SHAPE = ShapeConfig("paper_b64", 1024, 64, "train")
+
+
+def paper_desc(cfg=ND_48):
+    return describe(cfg, PAPER_SHAPE, per_layer=True)
+
+
+# --- factorization enumeration ------------------------------------------------
+
+@pytest.mark.parametrize("n", [8, 16])
+def test_factorizations_exhaustive(n):
+    """Every (dp, tp, pp) with dp*tp*pp == n appears exactly once."""
+    got = {(f.dp, f.tp, f.pp) for f in factorizations(n)}
+    want = {(dp, tp, pp)
+            for dp in range(1, n + 1)
+            for tp in range(1, n + 1)
+            for pp in range(1, n + 1)
+            if dp * tp * pp == n}
+    assert got == want
+    assert len(factorizations(n)) == len(got)   # no duplicates
+    assert (n, 1, 1) in got                     # pure DP is a legal point
+
+
+def test_factorizations_caps():
+    fs = factorizations(16, max_tp=4, max_pp=2)
+    assert fs and all(f.tp <= 4 and f.pp <= 2 for f in fs)
+    assert all(f.n_devices == 16 for f in fs)
+
+
+def test_factorization_mesh_config():
+    cfg = Factorization(4, 2, 2).mesh_config()
+    assert cfg.shape == (4, 2, 2)
+    assert cfg.axes == ("data", "model", "pipe")
+    assert cfg.data_parallel == 4
+    assert cfg.model_parallel == 2
+    assert cfg.pipeline_parallel == 2
+    assert cfg.n_devices == 16
+
+
+# --- cost-term building blocks ------------------------------------------------
+
+def test_stage_bounds_partition_layers():
+    for L, pp in ((48, 4), (7, 3), (2, 8), (1, 1)):
+        b = stage_bounds(L, pp)
+        assert b[0] == 0 and b[-1] == L
+        assert list(b) == sorted(b)
+        assert len(b) == min(pp, L) + 1          # pp clamped to L
+        sizes = [b[i + 1] - b[i] for i in range(len(b) - 1)]
+        assert max(sizes) - min(sizes) <= 1       # near-equal stages
+
+
+def test_slice_description_scales_residue():
+    desc = paper_desc()
+    sub = slice_description(desc, tp=2, pp=4)
+    assert sub.total_params == pytest.approx(desc.total_params / 8, rel=0.01)
+    assert sub.resident_act_bytes_per_token == pytest.approx(
+        desc.resident_act_bytes_per_token / 8)
+    assert slice_description(desc, 1, 1) is desc
+
+
+def test_tp_pp_terms_zero_when_trivial():
+    desc = paper_desc()
+    assert tp_activation_time(desc, RTX_TITAN_8, 8, tp=1) == 0.0
+    assert pp_bubble_fraction(1, 8) == 0.0
+    assert hybrid_step_time(1.0, desc, RTX_TITAN_8, 64,
+                            Factorization(8, 1, 1)) == 1.0
+
+
+def test_hybrid_step_time_monotone_in_bubble():
+    desc = paper_desc()
+    t2 = hybrid_step_time(1.0, desc, RTX_TITAN_8, 64, Factorization(4, 1, 2))
+    t4 = hybrid_step_time(1.0, desc, RTX_TITAN_8, 64, Factorization(2, 1, 4))
+    assert 1.0 < t2 < t4
+
+
+# --- search_hybrid ------------------------------------------------------------
+
+def _run(force_mode=None, mem_gib=16.0, cfg=ND_48, n_dev=8, **kw):
+    osdp = OSDPConfig(memory_limit_bytes=mem_gib * 2**30,
+                      operator_splitting=force_mode is None,
+                      allow_pod_hierarchical=False,
+                      checkpointing=False, force_mode=force_mode)
+    return search_hybrid_core(paper_desc(cfg), RTX_TITAN_8, n_dev, osdp,
+                              batch_candidates=[64], **kw)
+
+
+@pytest.mark.parametrize("mem_gib", [8.0, 16.0, 24.0])
+def test_search_hybrid_respects_memory_limit(mem_gib):
+    plan = _run(mem_gib=mem_gib)
+    assert isinstance(plan, HybridPlan)
+    if plan.feasible:
+        assert plan.cost.memory <= mem_gib * 2**30
+    assert plan.factorization.n_devices == 8
+
+
+def test_search_hybrid_3d_osdp_beats_plain_3d():
+    """The paper's headline: replacing the DP dimension of 3D with the
+    OSDP search never loses (Fig. 5/6 3D vs 3D+OSDP rows)."""
+    osdp = _run()
+    plain = _run(force_mode="ZDP")
+    assert osdp.feasible and plain.feasible
+    assert osdp.cost.throughput >= plain.cost.throughput * (1 - 1e-9)
+
+
+def test_search_hybrid_matches_or_beats_seed_rows():
+    """The analytical script this search replaced (benchmarks/hybrid_3d.py
+    at the seed commit) reported these best 3D+OSDP rows; the unified
+    search must match or beat them on the same inputs."""
+    seed_rows = {"nd-48x1024": 46059.0, "nd-64x1280": 21691.0}
+    for name, seed_thr in seed_rows.items():
+        layers, hidden = name.split("-")[1].split("x")
+        plan = _run(cfg=_gpt(name, int(layers), int(hidden)))
+        assert plan.feasible, name
+        # the seed CSV printed tokens/s rounded to integers: allow the
+        # half-token slack that rounding introduced
+        assert plan.cost.throughput >= seed_thr - 0.5, (
+            f"{name}: {plan.cost.throughput:.0f} < seed {seed_thr:.0f}")
+
+
+def test_search_hybrid_infeasible_forced_factorization():
+    """pp > n_layers is inadmissible: reported infeasible, not raised."""
+    plan = _run(cfg=_gpt("ws-2x6144", 2, 6144),
+                candidates=[Factorization(1, 1, 8)])
+    assert not plan.feasible
+    assert plan.cost.throughput == 0.0
+
+
+def test_search_hybrid_sweep_is_recorded():
+    plan = _run()
+    assert plan.swept, "no feasible sweep points recorded"
+    best = max(thr for _, thr in plan.swept)
+    assert plan.cost.throughput == pytest.approx(best)
+    # one entry per factorization (split/no-split deduped)
+    fs = [f for f, _ in plan.swept]
+    assert len(fs) == len(set(fs))
+
+
+def test_api_entry_point_returns_hybrid_plan():
+    from repro.core.api import search_hybrid
+    plan = search_hybrid(ND_48, PAPER_SHAPE, n_devices=8,
+                         device=RTX_TITAN_8, memory_limit_gib=16.0,
+                         checkpointing=False, batch_candidates=[64])
+    assert isinstance(plan, HybridPlan)
+    assert plan.feasible
+    assert "hybrid[" in plan.summary()
+    assert all(isinstance(d.modes, tuple)
+               for d in plan.decisions.values())
+
+
+# --- stage-level sharding plumbing -------------------------------------------
+
+def test_stage_of_layer():
+    b = stage_bounds(48, 4)
+    assert stage_of_layer(0, b) == 0
+    assert stage_of_layer(47, b) == 3
+    with pytest.raises(ValueError):
+        stage_of_layer(48, b)
+
+
+def test_stage_weight_specs_slices_stacked():
+    specs = [
+        WeightSpec("embed/tok", (512, 64), "embed.tok"),
+        WeightSpec("layers/ffn/w13", (48, 64, 256), "layers.ffn_w13",
+                   zdp_axis=2, stacked=True),
+        WeightSpec("head/out", (64, 512), "head.out"),
+    ]
+    b = stage_bounds(48, 4)
+    per_stage = [stage_weight_specs(specs, b, s) for s in range(4)]
+    # embeddings first stage, head last, stacked split 12 layers each
+    assert [s.path for s in per_stage[0]] == ["embed/tok", "layers/ffn/w13"]
+    assert [s.path for s in per_stage[3]] == ["layers/ffn/w13", "head/out"]
+    for stage in per_stage:
+        stacked = [s for s in stage if s.stacked]
+        assert stacked[0].shape == (12, 64, 256)
+    total = sum(s.shape[0] for stage in per_stage
+                for s in stage if s.stacked)
+    assert total == 48
+
+
+def test_stage_weight_specs_tied_embeddings():
+    """Tied-embedding models have no head weight: the embedding must
+    also land on the last stage to project logits there."""
+    specs = [
+        WeightSpec("embed/tok", (512, 64), "embed.tok"),
+        WeightSpec("layers/ffn/w13", (48, 64, 256), "layers.ffn_w13",
+                   zdp_axis=2, stacked=True),
+        WeightSpec("final_norm", (64,), "final_norm"),
+    ]
+    b = stage_bounds(48, 4)
+    first = stage_weight_specs(specs, b, 0)
+    last = stage_weight_specs(specs, b, 3)
+    assert "embed/tok" in [s.path for s in first]
+    assert "embed/tok" in [s.path for s in last]
+    assert "final_norm" in [s.path for s in last]
+    # pp=1: single stage holds everything exactly once
+    one = stage_weight_specs(specs, stage_bounds(48, 1), 0)
+    assert [s.path for s in one] == ["embed/tok", "layers/ffn/w13",
+                                    "final_norm"]

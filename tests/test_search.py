@@ -5,8 +5,10 @@ import itertools
 import math
 import random
 
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.configs import (DeviceInfo, SINGLE_POD_MESH, OSDPConfig,
