@@ -1,9 +1,9 @@
 """OSDP core: the paper's contribution as a composable JAX module."""
 from repro.core.api import (  # noqa: F401
-    dp_baseline, fsdp_baseline, osdp, search_hybrid)
+    dp_baseline, evaluate_plan, fsdp_baseline, osdp, search_hybrid)
 from repro.core.cost_model import (  # noqa: F401
-    DP, ZDP, ZDP_POD, CostEnv, Decision, OpCost, PlanCost, op_cost,
-    plan_cost, uniform_plan, zdp_extra_time, zdp_saving)
+    DP, ZDP, ZDP_POD, CostEnv, Decision, OpCost, PlanCost, PlanEvaluator,
+    op_cost, plan_cost, uniform_plan, zdp_extra_time, zdp_saving)
 from repro.core.descriptions import (  # noqa: F401
     ModelDescription, OperatorDesc, describe, sanity_check)
 from repro.core.hybrid import (  # noqa: F401

@@ -12,11 +12,13 @@ data parallelism — the baselines the paper compares against.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Union
+from typing import Dict, Optional, Sequence, Union
 
 from repro.configs.base import (DeviceInfo, MeshConfig, ModelConfig,
                                 OSDPConfig, RunConfig, ShapeConfig,
                                 SINGLE_POD_MESH)
+from repro.core.cost_model import (CostEnv, Decision, PlanCost,
+                                   PlanEvaluator)
 from repro.core.descriptions import ModelDescription, describe
 from repro.core.hybrid import Factorization, HybridPlan
 from repro.core.plan import Plan, make_plan
@@ -98,6 +100,36 @@ def search_hybrid(model: Union[ModelConfig, ModelDescription],
         desc, device or DeviceInfo(), n_devices, cfg,
         batch_candidates=batch_candidates, micro=micro,
         candidates=candidates, max_tp=max_tp, max_pp=max_pp)
+
+
+def evaluate_plan(model: Union[ModelConfig, ModelDescription],
+                  decisions: Dict[str, Decision],
+                  shape: Optional[ShapeConfig] = None,
+                  mesh: MeshConfig = SINGLE_POD_MESH,
+                  *,
+                  global_batch: Optional[int] = None,
+                  device: Optional[DeviceInfo] = None,
+                  checkpointing: bool = True,
+                  train: bool = True) -> PlanCost:
+    """Score an explicit plan through the vectorized PlanEvaluator.
+
+    Same result as `cost_model.plan_cost` (to float-summation order),
+    but table-driven: callers scoring many plans against one
+    (model, mesh) — schedulers, what-if tooling, external autotuners —
+    should hold a `PlanEvaluator` directly; this one-call wrap is for
+    one-off scoring.
+    """
+    if isinstance(model, ModelDescription):
+        desc = model
+    else:
+        if shape is None:
+            raise TypeError("shape is required when model is a ModelConfig")
+        desc = describe(model, shape)
+    env = CostEnv(device or DeviceInfo(), mesh,
+                  checkpointing=checkpointing, train=train)
+    ev = PlanEvaluator.for_decisions(desc, env, decisions)
+    modes = ev.modes_from_decisions(decisions)
+    return ev.plan_cost(modes, global_batch or desc.shape.global_batch)
 
 
 def fsdp_baseline(model: ModelConfig, shape: ShapeConfig,

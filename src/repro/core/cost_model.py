@@ -23,6 +23,8 @@ import dataclasses
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.configs.base import DeviceInfo, MeshConfig
 from repro.core.descriptions import (ACT_BYTES, BYTES_PER_PARAM,
                                      ModelDescription, OperatorDesc,
@@ -222,6 +224,283 @@ def plan_cost(desc: ModelDescription, decisions: Dict[str, Decision],
     return PlanCost(memory=mem, peak_memory=mem + peak, time=time,
                     comm_time=comm, compute_time=compute,
                     throughput=tokens / time if time > 0 else 0.0)
+
+
+# ---------------------------------------------------------------------------
+# PlanEvaluator: incremental, vectorized Profiler
+# ---------------------------------------------------------------------------
+
+class PlanEvaluator:
+    """Table-driven plan evaluation with O(1) per-slice delta updates.
+
+    ``plan_cost`` walks every operator in Python and re-derives each
+    run's collective terms from scratch — fine for scoring one plan,
+    quadratic when a search evaluates thousands of neighbouring plans
+    (the repair loop flips one slice at a time, the Scheduler re-scores
+    per batch candidate).  This class precomputes, once per
+    (description, env, slice layout):
+
+      * per-slice, per-mode additive terms — sharded state bytes and the
+        run-length-linear part of the collective time (ZDP's per-slice
+        ``alpha`` and everyone's beta term scale with run length, so
+        they distribute exactly over slices),
+      * per-op, per-mode *run* constants — the terms ``op_cost`` charges
+        once per merged same-mode run: the transiently gathered slice
+        (M_extra) for ZDP runs, the 2(N-1)·alpha grad-all-reduce latency
+        for DP runs, the cross-pod alpha for ZDP_POD,
+      * batch slopes — activation and compute scale linearly with the
+        per-device batch, so changing the batch re-uses every table.
+
+    A full plan evaluation is then a vectorized table gather, and
+    flipping one slice's mode only touches that slice's additive terms
+    plus the run boundaries next to it: an O(1) update (``begin`` /
+    ``flip``).  Results match ``plan_cost`` to float-summation-order
+    (~1e-12 relative; asserted at 1e-9 by tests/test_plan_evaluator.py).
+
+    Slice layout: every operator contributes ``granularity[op.name]``
+    slices (default 1 — ``plan_cost``'s layout for missing decisions).
+    """
+
+    def __init__(self, desc: ModelDescription, env: CostEnv,
+                 granularity: Optional[Dict[str, int]] = None):
+        self.desc = desc
+        self.env = env
+        gran = granularity or {}
+        dev = env.device
+        tp = env.n_tp
+        seq = desc.shape.seq_len
+        n_d = env.n_data
+        n_l = env.n_data_local
+        n_pods = n_d // max(1, n_l)
+        rounds = (3 + (1 if env.checkpointing else 0)) if env.train else 1
+        bw_data = dev.link_bw("data")
+        bw_pod = dev.link_bw("pod")
+        bw_zdp = min(dev.link_bw(a) for a in env.mesh.axes
+                     if a in ("pod", "data"))
+
+        ops = desc.operators
+        self.n_ops = len(ops)
+        self.op_names = [op.name for op in ops]
+        self.granularity = np.array(
+            [max(1, gran.get(op.name, 1)) for op in ops], dtype=np.int64)
+        self.op_start = np.zeros(self.n_ops, dtype=np.int64)
+        np.cumsum(self.granularity[:-1], out=self.op_start[1:])
+        self.n_slices = int(self.granularity.sum())
+        self.slice_op = np.repeat(np.arange(self.n_ops), self.granularity)
+
+        g = self.granularity.astype(np.float64)
+        state_b = np.array(
+            [(op.state_bytes if env.train else op.param_bytes) / tp
+             for op in ops])
+        param_b = np.array([op.param_bytes / tp for op in ops])
+        layers = np.array([max(1, op.layers) for op in ops],
+                          dtype=np.float64)
+        self.gathered = param_b / (layers * g)       # per non-DP run M_extra
+
+        # batch slopes (per unit of per-device batch)
+        act = np.array([op.act_bytes_per_token / tp for op in ops]) * seq
+        if env.checkpointing:
+            act = act / layers
+        self._act_slope = float(act.sum())
+        self._resident_slope = desc.resident_act_bytes_per_token * seq / tp
+        comp = np.array([op.flops_per_token for op in ops]) * seq / tp \
+            / (dev.peak_flops * dev.mxu_efficiency)
+        if env.train:
+            comp = comp * 3.0
+        if env.checkpointing:
+            comp = comp * 1.30
+        self._comp_slope = float(comp.sum())
+
+        # per-op per-mode tables; column order follows MODES
+        mem_op = np.zeros((self.n_ops, len(MODES)))
+        comm_op = np.zeros((self.n_ops, len(MODES)))     # per-slice additive
+        self.mem_run = np.zeros((self.n_ops, len(MODES)))
+        self.comm_run = np.zeros((self.n_ops, len(MODES)))
+        sliced = param_b / g                              # per-slice bytes
+        # DP: states replicated; grads all-reduced over the full data
+        # extent (training only): alpha once per run, beta per slice
+        mem_op[:, 0] = state_b / g
+        if env.train and n_d > 1:
+            comm_op[:, 0] = 2 * (n_d - 1) * (sliced / n_d / bw_data)
+            self.comm_run[:, 0] = 2 * (n_d - 1) * dev.alpha
+        # ZDP: flat gather over pod x data; alpha scales with run length
+        # (chunked execution), so it is fully per-slice
+        mem_op[:, 1] = state_b / g / n_d
+        if n_d > 1:
+            comm_op[:, 1] = rounds * (n_d - 1) * (
+                dev.alpha + sliced / n_d / bw_zdp)
+        self.mem_run[:, 1] = self.gathered
+        # ZDP_POD: in-pod gather on ICI + cross-pod grad all-reduce
+        mem_op[:, 2] = state_b / g / max(1, n_l)
+        if n_l > 1:
+            comm_op[:, 2] = rounds * (n_l - 1) * (
+                dev.alpha + sliced / n_l / bw_data)
+        if n_pods > 1:
+            comm_op[:, 2] += 2 * (n_pods - 1) * (
+                (sliced / n_l) / n_pods / bw_pod)
+            self.comm_run[:, 2] = 2 * (n_pods - 1) * dev.alpha
+        self.mem_run[:, 2] = self.gathered
+        self.mem_slice = mem_op[self.slice_op]
+        self.comm_slice = comm_op[self.slice_op]
+
+        self._all_dp_static = float(self.mem_slice[:, 0].sum())
+        # incremental state (begin/flip)
+        self._modes: Optional[np.ndarray] = None
+        self._batch = 0
+
+    # -- layout helpers ------------------------------------------------------
+
+    @classmethod
+    def for_decisions(cls, desc: ModelDescription, env: CostEnv,
+                      decisions: Dict[str, Decision]) -> "PlanEvaluator":
+        """Evaluator whose slice layout matches an existing plan."""
+        gran = {name: d.split for name, d in decisions.items()}
+        return cls(desc, env, gran)
+
+    def modes_from_decisions(
+            self, decisions: Dict[str, Decision]) -> np.ndarray:
+        modes = np.zeros(self.n_slices, dtype=np.int8)
+        index = {m: i for i, m in enumerate(MODES)}
+        for k, name in enumerate(self.op_names):
+            dec = decisions.get(name)
+            if dec is None:
+                continue
+            s = int(self.op_start[k])
+            if dec.split != int(self.granularity[k]):
+                raise ValueError(
+                    f"{name}: decision split {dec.split} != evaluator "
+                    f"layout {int(self.granularity[k])}")
+            for j, m in enumerate(dec.modes):
+                modes[s + j] = index[m]
+        return modes
+
+    def decisions(self, modes: np.ndarray) -> Dict[str, Decision]:
+        out: Dict[str, Decision] = {}
+        for k, name in enumerate(self.op_names):
+            s = int(self.op_start[k])
+            e = s + int(self.granularity[k])
+            out[name] = Decision(
+                name, tuple(MODES[m] for m in modes[s:e]))
+        return out
+
+    # -- vectorized full evaluation ------------------------------------------
+
+    def _bpd(self, global_batch: int) -> int:
+        return max(1, global_batch // self.env.n_data)
+
+    def all_dp_memory(self, global_batch: int) -> float:
+        """Steady memory of the all-DP plan (the search's base cost)."""
+        bpd = self._bpd(global_batch)
+        return (self._all_dp_static + self._resident_slope * bpd
+                + self._act_slope * bpd)
+
+    def _static_sums(self, modes: np.ndarray) -> Tuple[float, float, float]:
+        """(steady memory w/o batch terms, comm seconds, peak extra)."""
+        idx = np.arange(self.n_slices)
+        mem = float(self.mem_slice[idx, modes].sum())
+        comm = float(self.comm_slice[idx, modes].sum())
+        starts = np.empty(self.n_slices, dtype=bool)
+        starts[0] = True
+        np.logical_or(modes[1:] != modes[:-1],
+                      self.slice_op[1:] != self.slice_op[:-1],
+                      out=starts[1:])
+        ops_r = self.slice_op[starts]
+        modes_r = modes[starts]
+        mem += float(self.mem_run[ops_r, modes_r].sum())
+        comm += float(self.comm_run[ops_r, modes_r].sum())
+        nonzero = np.add.reduceat(
+            (modes != 0).astype(np.int64), self.op_start)
+        peak = float(self.gathered[nonzero > 0].max()) \
+            if bool((nonzero > 0).any()) else 0.0
+        return mem, comm, peak
+
+    def plan_cost(self, modes: np.ndarray,
+                  global_batch: int) -> PlanCost:
+        """Full vectorized evaluation — `cost_model.plan_cost` semantics."""
+        mem_s, comm, peak = self._static_sums(modes)
+        bpd = self._bpd(global_batch)
+        mem = float(mem_s + self._resident_slope * bpd
+                    + self._act_slope * bpd)
+        compute = self._comp_slope * bpd
+        time = comm + compute
+        tokens = global_batch * self.desc.shape.seq_len
+        return PlanCost(memory=mem, peak_memory=mem + peak, time=time,
+                        comm_time=comm, compute_time=compute,
+                        throughput=tokens / time if time > 0 else 0.0)
+
+    # -- incremental evaluation ----------------------------------------------
+
+    def begin(self, modes: np.ndarray, global_batch: int) -> None:
+        """Start an incremental evaluation from `modes` (copied)."""
+        self._modes = np.asarray(modes, dtype=np.int8).copy()
+        self._batch = global_batch
+        mem_s, comm, _ = self._static_sums(self._modes)
+        self._mem_static = mem_s
+        self._comm = comm
+        self._nonzero = np.add.reduceat(
+            (self._modes != 0).astype(np.int64), self.op_start)
+
+    def _run_const_window(self, j: int, k: int, mode_j: int) -> \
+            Tuple[float, float]:
+        """Run-constant contribution of the boundaries at j and j+1 if
+        slice j had mode `mode_j` (neighbours read from current state)."""
+        modes = self._modes
+        mem = comm = 0.0
+        left_same = j > 0 and int(self.slice_op[j - 1]) == k
+        if (not left_same) or int(modes[j - 1]) != mode_j:
+            mem += self.mem_run[k, mode_j]
+            comm += self.comm_run[k, mode_j]
+        right = j + 1
+        if right < self.n_slices and int(self.slice_op[right]) == k:
+            mr = int(modes[right])
+            if mr != mode_j:
+                mem += self.mem_run[k, mr]
+                comm += self.comm_run[k, mr]
+        return mem, comm
+
+    def flip(self, j: int, new_mode: int) -> None:
+        """O(1): change slice j's mode in the running evaluation."""
+        assert self._modes is not None, "begin() first"
+        old = int(self._modes[j])
+        if old == new_mode:
+            return
+        k = int(self.slice_op[j])
+        self._mem_static += float(self.mem_slice[j, new_mode]
+                                  - self.mem_slice[j, old])
+        self._comm += float(self.comm_slice[j, new_mode]
+                            - self.comm_slice[j, old])
+        mem_b, comm_b = self._run_const_window(j, k, old)
+        mem_a, comm_a = self._run_const_window(j, k, new_mode)
+        self._mem_static += float(mem_a - mem_b)
+        self._comm += float(comm_a - comm_b)
+        self._modes[j] = new_mode
+        self._nonzero[k] += (new_mode != 0) - (old != 0)
+
+    @property
+    def current_modes(self) -> np.ndarray:
+        """Mode indices of the running evaluation (live view)."""
+        assert self._modes is not None, "begin() first"
+        return self._modes
+
+    @property
+    def memory(self) -> float:
+        """Steady per-device bytes of the running evaluation."""
+        bpd = self._bpd(self._batch)
+        return (self._mem_static + self._resident_slope * bpd
+                + self._act_slope * bpd)
+
+    def result(self) -> PlanCost:
+        """PlanCost of the running evaluation (peak recomputed exactly)."""
+        bpd = self._bpd(self._batch)
+        mem = self.memory
+        compute = self._comp_slope * bpd
+        time = self._comm + compute
+        peak = float(self.gathered[self._nonzero > 0].max()) \
+            if bool((self._nonzero > 0).any()) else 0.0
+        tokens = self._batch * self.desc.shape.seq_len
+        return PlanCost(memory=mem, peak_memory=mem + peak, time=time,
+                        comm_time=self._comm, compute_time=compute,
+                        throughput=tokens / time if time > 0 else 0.0)
 
 
 # convenience whole-model plans ----------------------------------------------

@@ -5,31 +5,51 @@ Three solvers over the same problem
 
   * ``dfs``      — the paper's depth-first search with its two pruning
                    rules (memory-exceeded, worse-than-incumbent), made
-                   exact-and-fast with branch-and-bound lower bounds and
-                   best-ratio branch ordering. Paper-faithful semantics:
-                   returns the same argmin as brute force.
+                   exact-and-fast with branch-and-bound lower bounds,
+                   best-ratio branch ordering, and *group collapsing*:
+                   per-layer descriptions expose hundreds of slices with
+                   identical (saving, cost) signatures, and the search
+                   branches on how many of each signature to shard
+                   instead of which — same optimum, exponentially fewer
+                   nodes. Paper-faithful semantics: returns the same
+                   argmin as brute force.
   * ``knapsack`` — beyond-paper exact solver: choosing ZDP for op i
                    saves dM_i memory and costs dT_i time, so the problem
-                   is a 0/1 knapsack-cover; solved by DP over discretized
-                   memory savings. O(n * M/Q) with quantum Q.
+                   is a 0/1 knapsack-cover; solved by a vectorized
+                   (numpy row-wise) DP over discretized memory savings
+                   with a compact int8 parent encoding. O(n * M/Q) cell
+                   relaxations with quantum Q.
   * ``greedy``   — dT/dM ratio heuristic, O(n log n); near-optimal when
                    savings are small relative to the gap (used to seed
                    the DFS incumbent).
 
+Plan evaluation around the solvers goes through
+``cost_model.PlanEvaluator``: per-op/per-mode cost tables are built once
+per (description, env), full evaluations are vectorized, and the repair
+loop's one-slice flips are O(1) delta updates instead of full
+``plan_cost`` re-walks (the pre-optimization path was
+O(slices^2 * ops) when repair triggered).
+
 The Scheduler sweeps the batch size b upward until even the
 all-ZDP+split plan exceeds the limit, keeping the throughput-argmax
-(Algorithm 1 lines 3–18, 20).
+(Algorithm 1 lines 3–18, 20); items and tables are shared across the
+whole sweep because only the batch-linear activation/compute terms
+change between candidates.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time as _time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.configs.base import DeviceInfo, MeshConfig, OSDPConfig
-from repro.core.cost_model import (DP, ZDP, ZDP_POD, CostEnv, Decision,
-                                   PlanCost, plan_cost, uniform_plan,
+from repro.core.cost_model import (DP, MODES, ZDP, ZDP_POD, CostEnv,
+                                   Decision, PlanCost, PlanEvaluator,
+                                   plan_cost, uniform_plan,
                                    zdp_extra_time, zdp_saving)
 from repro.core.descriptions import ModelDescription, OperatorDesc
 from repro.core.hybrid import (Factorization, HybridPlan, factorizations,
@@ -57,6 +77,8 @@ class SearchResult:
     feasible: bool
     solver: str
     search_seconds: float
+    # solver effort: dfs = branch-and-bound nodes expanded, knapsack =
+    # DP cells relaxed, greedy = items ranked (see BENCH_search.json)
     nodes_visited: int = 0
     candidates: List[Tuple[int, float]] = field(default_factory=list)
     # (batch, throughput) per Scheduler iteration — Algorithm 1's P set
@@ -130,141 +152,231 @@ def _base_cost(desc: ModelDescription, batch: int,
     return plan_cost(desc, uniform_plan(desc, DP), batch, env)
 
 
+def _best_mode(it: SliceItem) -> str:
+    """Cheapest dT/dM mode for one item (the repair/branch order key)."""
+    return min(it.savings, key=lambda m: it.extra_time[m]
+               / max(it.savings[m], 1e-9))
+
+
+def _best_ratio(it: SliceItem) -> float:
+    return min(it.extra_time[m] / max(it.savings[m], 1e-9)
+               for m in it.savings)
+
+
 # ---------------------------------------------------------------------------
-# Solver 1: the paper's DFS (branch and bound, exact)
+# Solver 1: the paper's DFS (branch and bound over signature groups, exact)
 # ---------------------------------------------------------------------------
 
 def _solve_dfs(items: List[SliceItem], need: float,
                node_budget: int = 2_000_000) -> Tuple[List[Optional[str]], int]:
     """Minimize sum extra_time s.t. sum savings >= need.
 
-    Paper Algorithm 1 lines 5–11: traverse {DP, ZDP}^n depth-first,
+    Paper Algorithm 1 lines 5–11: traverse the plan space depth-first,
     pruning on (a) memory infeasibility and (b) incumbent time bound.
-    We order operators by best dT/dM ratio and add an admissible bound
-    (remaining need * best remaining ratio), which keeps the traversal
-    exact while visiting few nodes.
+    Items with identical (savings, extra_time) signatures — all slices
+    of one stacked operator, and every per-layer copy of the same
+    operator — are interchangeable, so the search branches on *how
+    many* of each signature group to shard per mode (a prefix of the
+    group, WLOG) rather than on each slice: the optimum is unchanged
+    and the tree shrinks from 2^n to a product over distinct
+    signatures. Within the remaining tree the classic bounds apply:
+    best-ratio level ordering, an admissible remaining-time bound
+    (remaining need x best remaining ratio), and a capacity bound
+    (even sharding everything left cannot cover the need).
     """
     n = len(items)
     if need <= 0:
         return [None] * n, 1
 
-    def best_ratio(it: SliceItem) -> float:
-        return min(it.extra_time[m] / max(it.savings[m], 1e-9)
-                   for m in it.savings)
+    # greedy incumbent (also the fallback when the need is uncoverable,
+    # matching the pre-grouping implementation)
+    inc_choice, inc_time = _solve_greedy(items, need)
 
-    order = sorted(range(n), key=lambda i: best_ratio(items[i]))
-    # suffix quantities for bounds
-    suffix_sav = [0.0] * (n + 1)
-    suffix_best_ratio = [float("inf")] * (n + 1)
-    for i in range(n - 1, -1, -1):
-        it = items[order[i]]
-        suffix_sav[i] = suffix_sav[i + 1] + max(it.savings.values())
-        suffix_best_ratio[i] = min(suffix_best_ratio[i + 1], best_ratio(it))
+    # group by exact cost signature
+    sig_groups: Dict[tuple, List[int]] = {}
+    for i, it in enumerate(items):
+        sig = (tuple(sorted(it.savings.items())),
+               tuple(sorted(it.extra_time.items())))
+        sig_groups.setdefault(sig, []).append(i)
+    glist = sorted(
+        ([idxs, items[idxs[0]]] for idxs in sig_groups.values()),
+        key=lambda g: _best_ratio(g[1]))
 
-    # greedy incumbent
-    incumbent_choice, incumbent_time = _solve_greedy(items, need)
-    best_time = incumbent_time
-    best_choice = list(incumbent_choice)
-    nodes = 0
-    choice: List[Optional[str]] = [None] * n
-
-    # pre-sorted branch options per item: cheapest-ratio mode first, DP last
-    branches: List[List[Optional[str]]] = []
-    for i in range(n):
-        it = items[order[i]]
+    # levels: one per (group, mode), contiguous per group, cheapest
+    # ratio first within the group
+    levels: List[Tuple[int, str, float, float, int, bool]] = []
+    for gi, (idxs, it) in enumerate(glist):
         ms = sorted(it.savings, key=lambda m: it.extra_time[m]
                     / max(it.savings[m], 1e-9))
-        branches.append(ms + [None])
+        for mj, m in enumerate(ms):
+            levels.append((gi, m, it.savings[m], it.extra_time[m],
+                           len(idxs), mj == 0))
+    L = len(levels)
 
-    # iterative DFS: frames of (depth, saved, t, next-branch index)
-    stack = [(0, 0.0, 0.0, 0)]
+    # bounds: max savings still reachable from a level (per-item, within
+    # the level's group) and over all later groups; best ratio suffix
+    inner_max = [0.0] * L
+    group_best = {}
+    for li in range(L - 1, -1, -1):
+        gi, m, sav, ext, k, is_first = levels[li]
+        group_best[gi] = max(group_best.get(gi, 0.0), sav)
+        inner_max[li] = group_best[gi]
+    suffix_group_sav = [0.0] * (len(glist) + 1)
+    for gi in range(len(glist) - 1, -1, -1):
+        idxs, it = glist[gi]
+        suffix_group_sav[gi] = (suffix_group_sav[gi + 1]
+                                + len(idxs) * max(it.savings.values()))
+    suffix_ratio = [float("inf")] * (L + 1)
+    for li in range(L - 1, -1, -1):
+        gi, m, sav, ext, k, is_first = levels[li]
+        suffix_ratio[li] = min(suffix_ratio[li + 1],
+                               ext / max(sav, 1e-9))
+
+    best_time = inc_time
+    best_counts: Optional[List[int]] = None
+    counts = [0] * L
+    nodes = 0
+
+    def c_max_at(li: int, rem: int, saved: float) -> int:
+        gi, m, sav, ext, k, is_first = levels[li]
+        if sav > 0:
+            c_cover = math.ceil((need - saved) / sav)
+            # sharding beyond coverage is dominated when it costs time
+            return min(rem, c_cover) if ext > 0 else rem
+        return rem if ext <= 0 else 0
+
+    # iterative DFS: frames of (level, remaining group capacity on
+    # entry, saved, t, next-branch index); branch bi maps to taking
+    # c = c_max - bi slices at this level (greedy-like: most first)
+    stack: List[Tuple[int, int, float, float, int]] = [(0, 0, 0.0, 0.0, 0)]
     while stack:
-        i, saved, t, bi = stack.pop()
+        li, rem, saved, t, bi = stack.pop()
         if bi == 0:
-            nodes += 1
-            if nodes > node_budget:
-                break
             if saved >= need:
                 if t < best_time:
                     best_time = t
-                    best_choice = list(choice)
+                    best_counts = counts[:li] + [0] * (L - li)
                 continue
-            if i == n:
-                continue  # infeasible leaf
+            if li == L:
+                continue
+            if levels[li][5]:                 # first level of its group
+                rem = levels[li][4]
+            gi = levels[li][0]
             # prune: even sharding everything left cannot cover the need
-            if saved + suffix_sav[i] < need:
+            if (saved + rem * inner_max[li]
+                    + suffix_group_sav[gi + 1] < need):
                 continue
             # prune: admissible lower bound on remaining time
-            if t + (need - saved) * suffix_best_ratio[i] >= best_time:
+            if t + (need - saved) * suffix_ratio[li] >= best_time:
                 continue
-        opts = branches[i]
-        if bi >= len(opts):
-            choice[order[i]] = None
-            continue
+            nodes += 1
+            if nodes > node_budget:
+                break
         # re-check the bound when revisiting (incumbent may have improved)
-        if bi > 0 and t + (need - saved) * suffix_best_ratio[i] >= best_time:
-            choice[order[i]] = None
+        elif t + (need - saved) * suffix_ratio[li] >= best_time:
+            counts[li] = 0
             continue
-        m = opts[bi]
-        stack.append((i, saved, t, bi + 1))   # resume point
-        choice[order[i]] = m
-        if m is None:
-            stack.append((i + 1, saved, t, 0))
-        else:
-            it = items[order[i]]
-            stack.append((i + 1, saved + it.savings[m],
-                          t + it.extra_time[m], 0))
+        c = c_max_at(li, rem, saved) - bi
+        if c < 0:                             # branches exhausted
+            counts[li] = 0
+            continue
+        _, m, sav, ext, k, _ = levels[li]
+        counts[li] = c
+        stack.append((li, rem, saved, t, bi + 1))   # resume point
+        stack.append((li + 1, rem - c, saved + c * sav, t + c * ext, 0))
 
-    return best_choice, nodes
+    if best_counts is None:
+        return list(inc_choice), nodes
+    choice: List[Optional[str]] = [None] * n
+    ptr = {gi: 0 for gi in range(len(glist))}
+    for li, c in enumerate(best_counts):
+        gi, m, sav, ext, k, is_first = levels[li]
+        idxs = glist[gi][0]
+        for _ in range(c):
+            choice[idxs[ptr[gi]]] = m
+            ptr[gi] += 1
+    return choice, nodes
 
 
 # ---------------------------------------------------------------------------
-# Solver 2: exact knapsack-cover DP (beyond paper)
+# Solver 2: exact knapsack-cover DP (beyond paper), vectorized
 # ---------------------------------------------------------------------------
 
 def _solve_knapsack(items: List[SliceItem], need: float,
-                    quantum: float = 16 * 2**20) -> List[Optional[str]]:
+                    quantum: float = 16 * 2**20
+                    ) -> Tuple[List[Optional[str]], int]:
     """DP over discretized memory saving. Savings are rounded DOWN (so a
-    'covered' answer is truly feasible); `need` is rounded up."""
+    'covered' answer is truly feasible); `need` is rounded up.
+
+    The relaxation is row-vectorized with numpy: one strided
+    minimum-update per (item, mode) instead of a Python loop over every
+    cell, and the n x cap parent table is an int8 mode index (plus one
+    int per item for the saturated top cell) instead of a list of
+    (state, mode) tuples. Returns (choice, cells_relaxed).
+    """
     n = len(items)
     if need <= 0:
-        return [None] * n
+        return [None] * n, 0
     cap = int(-(-need // quantum))          # ceil
+    mode_lists = [list(it.savings) for it in items]
+    q_best = [max((int(sav // quantum) for sav in it.savings.values()),
+                  default=0) for it in items]
+    if sum(q_best) < cap:
+        # uncoverable even at full sharding (the saturating DP could
+        # never reach the cap cell): same fallback, without the table
+        return [max(it.savings, key=it.savings.get) for it in items], 0
+
     INF = float("inf")
-    # dp[s] = min time to save >= s quanta (clamped at cap)
-    dp = [INF] * (cap + 1)
+    dp = np.full(cap + 1, INF)
     dp[0] = 0.0
-    parent: List[List[Optional[Tuple[int, str]]]] = [
-        [None] * (cap + 1) for _ in range(n + 1)]
+    pmode = np.full((n, cap + 1), -1, dtype=np.int8)
+    pcap = np.full(n, -1, dtype=np.int64)   # source state for cap updates
+    cells = 0
     for i, it in enumerate(items):
-        ndp = dp[:]
-        npar = [None] * (cap + 1)
-        for m, sav in it.savings.items():
-            q = int(sav // quantum)
+        ndp = dp.copy()
+        row = pmode[i]
+        for mi, m in enumerate(mode_lists[i]):
+            q = int(it.savings[m] // quantum)
             if q == 0:
                 continue
             t = it.extra_time[m]
-            for s in range(cap + 1):
-                if dp[s] == INF:
-                    continue
-                s2 = min(cap, s + q)
-                if dp[s] + t < ndp[s2]:
-                    ndp[s2] = dp[s] + t
-                    npar[s2] = (s, m)
+            cells += int(np.isfinite(dp).sum())
+            if q <= cap and cap - q >= 1:
+                # exact targets: state s -> s + q for s in [0, cap-q)
+                cand = dp[:cap - q] + t
+                tgt = ndp[q:cap]
+                imp = cand < tgt
+                if imp.any():
+                    tgt[imp] = cand[imp]
+                    row[q:cap][imp] = mi
+            # states [max(0, cap-q), cap] all saturate into the cap
+            # cell; the winner is the first minimum (strict-improvement
+            # sweep order of the scalar implementation)
+            lo = max(0, cap - q)
+            window = dp[lo:]
+            j = int(np.argmin(window))
+            v = window[j] + t
+            if v < ndp[cap]:
+                ndp[cap] = v
+                row[cap] = mi
+                pcap[i] = lo + j
         dp = ndp
-        parent[i + 1] = npar  # type: ignore[assignment]
-    if dp[cap] == INF:
-        # infeasible even at full sharding
-        return [max(it.savings, key=it.savings.get) for it in items]
+    if not np.isfinite(dp[cap]):
+        return [max(it.savings, key=it.savings.get) for it in items], cells
     # backtrack
     choice: List[Optional[str]] = [None] * n
     s = cap
-    for i in range(n, 0, -1):
-        p = parent[i][s]
-        if p is not None:
-            s, m = p
-            choice[i - 1] = m
-    return choice
+    for i in range(n - 1, -1, -1):
+        mi = int(pmode[i, s])
+        if mi < 0:
+            continue
+        m = mode_lists[i][mi]
+        choice[i] = m
+        if s == cap:
+            s = int(pcap[i])
+        else:
+            s -= int(items[i].savings[m] // quantum)
+    return choice, cells
 
 
 # ---------------------------------------------------------------------------
@@ -279,8 +391,7 @@ def _solve_greedy(items: List[SliceItem],
         return choice, 0.0
     ranked = []
     for i, it in enumerate(items):
-        m = min(it.savings, key=lambda m: it.extra_time[m]
-                / max(it.savings[m], 1e-9))
+        m = _best_mode(it)
         ranked.append((it.extra_time[m] / max(it.savings[m], 1e-9), i, m))
     ranked.sort()
     saved = t = 0.0
@@ -294,13 +405,92 @@ def _solve_greedy(items: List[SliceItem],
 
 
 # ---------------------------------------------------------------------------
-# Search Engine: fixed-b solve
+# Search Engine: reusable context + fixed-b solve
 # ---------------------------------------------------------------------------
+
+class _SearchContext:
+    """Everything batch-independent about one search problem.
+
+    Items (per-slice savings / extra-time) and the PlanEvaluator tables
+    depend only on (description, env, osdp); the Scheduler's batch sweep
+    and search_hybrid's factorization sweep re-use one context instead
+    of rebuilding them per candidate — only the batch-linear activation
+    and compute terms change between solves.
+    """
+
+    def __init__(self, desc: ModelDescription, env: CostEnv,
+                 osdp: OSDPConfig):
+        self.desc = desc
+        self.env = env
+        self.osdp = osdp
+        self.items = _build_items(desc, env, osdp)
+        gran = {it.op_name: it.n_slices for it in self.items}
+        self.ev = PlanEvaluator(desc, env, gran)
+        op_index = {name: k for k, name in enumerate(self.ev.op_names)}
+        self.item_slice = np.array(
+            [int(self.ev.op_start[op_index[it.op_name]]) + it.slice_idx
+             for it in self.items], dtype=np.int64)
+        self.mode_idx = {m: i for i, m in enumerate(MODES)}
+
+    def _modes_of(self, choice: List[Optional[str]]) -> np.ndarray:
+        modes = np.zeros(self.ev.n_slices, dtype=np.int8)
+        for i, c in enumerate(choice):
+            if c is not None:
+                modes[self.item_slice[i]] = self.mode_idx[c]
+        return modes
+
+    def solve(self, global_batch: int) -> SearchResult:
+        t0 = _time.perf_counter()
+        osdp = self.osdp
+        limit = osdp.memory_limit_bytes
+        items = self.items
+        need = self.ev.all_dp_memory(global_batch) - limit
+        if osdp.search == "dfs":
+            choice, nodes = _solve_dfs(items, need)
+        elif osdp.search == "knapsack":
+            choice, nodes = _solve_knapsack(items, need)
+        elif osdp.search == "greedy":
+            choice, _ = _solve_greedy(items, need)
+            nodes = len(items)
+        else:
+            raise ValueError(f"unknown solver {osdp.search!r}")
+
+        ev = self.ev
+        ev.begin(self._modes_of(choice), global_batch)
+
+        # Repair: per-slice savings are exact for uniform runs but
+        # slightly optimistic for mixed ones (each ZDP run re-gathers a
+        # slice), so the Profiler's evaluation can come out a hair over
+        # the limit. Flip the cheapest remaining DP slices until the
+        # evaluation fits — each flip is an O(1) evaluator delta.
+        if ev.memory > limit:
+            remaining = sorted(
+                (i for i, c in enumerate(choice) if c is None),
+                key=lambda i: _best_ratio(items[i]))
+            for i in remaining:
+                m = _best_mode(items[i])
+                choice[i] = m
+                ev.flip(int(self.item_slice[i]), self.mode_idx[m])
+                if ev.memory <= limit:
+                    break
+            if ev.memory > limit:
+                # escalate every slice to its max-saving mode (ZDP) —
+                # the most-sharded plan is the feasibility frontier
+                choice = [max(it.savings, key=it.savings.get)
+                          for it in items]
+                ev.begin(self._modes_of(choice), global_batch)
+
+        cost = ev.result()
+        decisions = ev.decisions(ev.current_modes)
+        return SearchResult(decisions, cost, global_batch,
+                            bool(cost.memory <= limit), osdp.search,
+                            _time.perf_counter() - t0, nodes)
+
 
 def search_plan(desc: ModelDescription, global_batch: int, env: CostEnv,
                 osdp: OSDPConfig) -> SearchResult:
-    t0 = _time.perf_counter()
     if osdp.force_mode:
+        t0 = _time.perf_counter()
         dec = uniform_plan(
             desc, osdp.force_mode,
             osdp.default_slice_granularity if osdp.operator_splitting else 1)
@@ -311,51 +501,7 @@ def search_plan(desc: ModelDescription, global_batch: int, env: CostEnv,
                             cost.memory <= osdp.memory_limit_bytes,
                             f"forced:{osdp.force_mode}",
                             _time.perf_counter() - t0)
-
-    items = _build_items(desc, env, osdp)
-    base = _base_cost(desc, global_batch, env)
-    need = base.memory - osdp.memory_limit_bytes
-    nodes = 0
-    if osdp.search == "dfs":
-        choice, nodes = _solve_dfs(items, need)
-    elif osdp.search == "knapsack":
-        choice = _solve_knapsack(items, need)
-    elif osdp.search == "greedy":
-        choice, _ = _solve_greedy(items, need)
-    else:
-        raise ValueError(f"unknown solver {osdp.search!r}")
-    decisions = _items_to_decisions(desc, items, choice)
-    cost = plan_cost(desc, decisions, global_batch, env)
-
-    # Repair: per-slice savings are exact for uniform runs but slightly
-    # optimistic for mixed ones (each ZDP run re-gathers a slice), so
-    # the Profiler's evaluation can come out a hair over the limit.
-    # Flip the cheapest remaining DP slices until the evaluation fits.
-    if cost.memory > osdp.memory_limit_bytes:
-        remaining = sorted(
-            (i for i, c in enumerate(choice) if c is None),
-            key=lambda i: min(items[i].extra_time[m]
-                              / max(items[i].savings[m], 1e-9)
-                              for m in items[i].savings))
-        for i in remaining:
-            it = items[i]
-            choice[i] = min(it.savings,
-                            key=lambda m: it.extra_time[m]
-                            / max(it.savings[m], 1e-9))
-            decisions = _items_to_decisions(desc, items, choice)
-            cost = plan_cost(desc, decisions, global_batch, env)
-            if cost.memory <= osdp.memory_limit_bytes:
-                break
-        if cost.memory > osdp.memory_limit_bytes:
-            # escalate every slice to its max-saving mode (ZDP) — the
-            # most-sharded plan is the feasibility frontier
-            choice = [max(it.savings, key=it.savings.get) for it in items]
-            decisions = _items_to_decisions(desc, items, choice)
-            cost = plan_cost(desc, decisions, global_batch, env)
-
-    return SearchResult(decisions, cost, global_batch,
-                        cost.memory <= osdp.memory_limit_bytes,
-                        osdp.search, _time.perf_counter() - t0, nodes)
+    return _SearchContext(desc, env, osdp).solve(global_batch)
 
 
 # ---------------------------------------------------------------------------
@@ -367,11 +513,18 @@ def schedule(desc: ModelDescription, env: CostEnv, osdp: OSDPConfig,
              max_batch: int = 4096) -> SearchResult:
     t0 = _time.perf_counter()
     best: Optional[SearchResult] = None
+    first: Optional[SearchResult] = None
     cands: List[Tuple[int, float]] = []
     batches = (list(batch_candidates) if batch_candidates is not None
                else _default_batches(max_batch, env))
+    if not batches:
+        raise ValueError("empty batch_candidates")
+    ctx = None if osdp.force_mode else _SearchContext(desc, env, osdp)
     for b in batches:
-        res = search_plan(desc, b, env, osdp)
+        res = ctx.solve(b) if ctx is not None \
+            else search_plan(desc, b, env, osdp)
+        if first is None:
+            first = res
         if not res.feasible:
             # Algorithm 1 line 12–14: all plans exceed the limit -> stop
             if best is not None:
@@ -381,8 +534,10 @@ def schedule(desc: ModelDescription, env: CostEnv, osdp: OSDPConfig,
         if best is None or res.cost.throughput > best.cost.throughput:
             best = res
     if best is None:
-        # nothing fits even fully sharded: return the most-sharded plan
-        best = search_plan(desc, batches[0], env, osdp)
+        # nothing fits even fully sharded: the first candidate's result
+        # is already the most-sharded plan — reuse it instead of paying
+        # a duplicate solve
+        best = first
     best.candidates = cands
     best.search_seconds = _time.perf_counter() - t0
     return best
@@ -423,6 +578,15 @@ def search_hybrid(desc: ModelDescription, device: DeviceInfo,
     search runs as well and the better of the two is kept (splitting
     trades smaller transient gathers for extra collective latency, so
     neither dominates — same policy as the fig5 benchmark).
+
+    Sweep-level optimizations (results unchanged):
+      * the inner problem only depends on (dp, tp*pp) — factorizations
+        sharing a residue and data extent reuse one sliced description
+        and one Scheduler solve (e.g. (4,16,1), (4,8,2), (4,4,4),
+        (4,2,8), (4,1,16) all share dp=4, tp*pp=16),
+      * factorizations are visited best-bound-first and skipped when
+        even their compute-only step time (comm >= 0 is dropped — an
+        admissible bound) cannot beat the incumbent's throughput.
     """
     t0 = _time.perf_counter()
     if candidates is None:
@@ -432,25 +596,55 @@ def search_hybrid(desc: ModelDescription, device: DeviceInfo,
                else [desc.shape.global_batch])
     n_layers = max(1, desc.model.n_layers)
 
+    # admissible throughput upper bound: the inner step time is at
+    # least the residue's compute time (the only mode-independent term)
+    flops_tok = sum(op.flops_per_token for op in desc.operators)
+    comp_unit = seq * 3.0 * (1.30 if osdp.checkpointing else 1.0) \
+        / (device.peak_flops * device.mxu_efficiency)
+
+    def thr_bound(f: Factorization) -> float:
+        best_b = 0.0
+        for b in batches:
+            bpd = max(1, b // f.dp)
+            t_comp = flops_tok / (f.tp * f.pp) * comp_unit * bpd
+            t = hybrid_step_time(t_comp, desc, device, b, f, micro)
+            if t > 0:
+                best_b = max(best_b, b * seq / t)
+        return best_b
+
+    admissible = [f for f in candidates if f.pp <= n_layers]
+    admissible.sort(key=thr_bound, reverse=True)
+
+    variants = [osdp]
+    if osdp.force_mode is None and osdp.operator_splitting:
+        variants.append(dataclasses.replace(osdp,
+                                            operator_splitting=False))
+
+    slice_cache: Dict[int, ModelDescription] = {}
+    sched_cache: Dict[Tuple[int, int, int], SearchResult] = {}
+
     best: Optional[HybridPlan] = None
     fallback: Optional[HybridPlan] = None   # min-memory infeasible plan
     swept: List[Tuple[Factorization, float]] = []
 
-    for f in candidates:
-        # explicit candidates may undersubscribe the environment (e.g.
-        # GPipe over 8 of 16 devices); only pp > layers is inadmissible
-        if f.pp > n_layers:
+    for f in admissible:
+        # dominance pruning: an incumbent nothing here can beat
+        if best is not None and (thr_bound(f) * (1 + 1e-9)
+                                 <= best.cost.throughput):
             continue
-        sub = slice_description(desc, f.tp, f.pp)
+        mp = f.tp * f.pp
+        sub = slice_cache.get(mp)
+        if sub is None:
+            sub = slice_cache[mp] = slice_description(desc, f.tp, f.pp)
         env = CostEnv(device, MeshConfig((f.dp, 1), ("data", "model")),
                       checkpointing=osdp.checkpointing, include_tp=False)
-        variants = [osdp]
-        if osdp.force_mode is None and osdp.operator_splitting:
-            variants.append(dataclasses.replace(
-                osdp, operator_splitting=False))
         local: Optional[HybridPlan] = None
-        for cfg in variants:
-            res = schedule(sub, env, cfg, batch_candidates=batches)
+        for vi, cfg in enumerate(variants):
+            key = (f.dp, mp, vi)
+            res = sched_cache.get(key)
+            if res is None:
+                res = sched_cache[key] = schedule(
+                    sub, env, cfg, batch_candidates=batches)
             t = hybrid_step_time(res.cost.time, desc, device,
                                  res.batch_size, f, micro)
             plan = _as_hybrid_plan(desc, device, f, res, t, micro, cfg)
@@ -513,5 +707,3 @@ def _as_hybrid_plan(desc: ModelDescription, device: DeviceInfo,
         decisions=res.decisions, cost=cost, batch_size=res.batch_size,
         micro=micro, feasible=res.feasible, dp_strategy=strategy,
         inner=res)
-
-

@@ -1,0 +1,300 @@
+"""PlanEvaluator equivalence: the vectorized/incremental fast path must
+return the same PlanCost (1e-9 rel) and the same argmin decisions as
+the direct `plan_cost` path — for arbitrary mixed plans, for O(1) flip
+sequences, and end-to-end through all three solvers (the pre-PR2
+search_plan semantics are replicated here as the golden reference)."""
+import random
+
+import numpy as np
+import pytest
+
+from repro.configs import (DeviceInfo, MULTI_POD_MESH, SINGLE_POD_MESH,
+                           OSDPConfig, get_arch, get_shape)
+from repro.core.cost_model import (DP, MODES, ZDP, ZDP_POD, CostEnv,
+                                   Decision, PlanEvaluator, plan_cost,
+                                   uniform_plan)
+from repro.core.descriptions import describe
+from repro.core.search import (_build_items, _items_to_decisions,
+                               _solve_dfs, _solve_greedy, _solve_knapsack,
+                               search_plan)
+
+MODELS = ("phi4-mini-3.8b", "dbrx-132b", "mamba2-2.7b")
+ENVS = {
+    "single_pod": CostEnv(DeviceInfo(), SINGLE_POD_MESH),
+    "multi_pod": CostEnv(DeviceInfo(), MULTI_POD_MESH),
+    "serve": CostEnv(DeviceInfo(), SINGLE_POD_MESH, train=False),
+    "no_ckpt": CostEnv(DeviceInfo(), SINGLE_POD_MESH, checkpointing=False),
+}
+
+
+def _random_plan(desc, rng, modes):
+    """Mixed split/unsplit decisions over random modes."""
+    decs = {}
+    for op in desc.operators:
+        if not op.decidable:
+            decs[op.name] = Decision(op.name, (DP,))
+            continue
+        g = rng.choice([1, 2, 4]) if op.splittable else 1
+        decs[op.name] = Decision(
+            op.name, tuple(rng.choice(modes) for _ in range(g)))
+    return decs
+
+
+def _assert_cost_equal(got, want, where=""):
+    for f in ("memory", "peak_memory", "time", "comm_time",
+              "compute_time", "throughput"):
+        g, w = getattr(got, f), getattr(want, f)
+        assert g == pytest.approx(w, rel=1e-9, abs=1e-12), (where, f, g, w)
+
+
+@pytest.mark.parametrize("model", MODELS)
+@pytest.mark.parametrize("env_name", sorted(ENVS))
+def test_evaluator_matches_plan_cost_on_mixed_plans(model, env_name):
+    desc = describe(get_arch(model), get_shape("train_4k"))
+    env = ENVS[env_name]
+    modes = ("DP", "ZDP", "ZDP_POD") if env.mesh.multi_pod \
+        else ("DP", "ZDP")
+    rng = random.Random(hash((model, env_name)) & 0xFFFF)
+    for trial in range(5):
+        decs = _random_plan(desc, rng, modes)
+        for batch in (16, 256, 1024):
+            want = plan_cost(desc, decs, batch, env)
+            ev = PlanEvaluator.for_decisions(desc, env, decs)
+            got = ev.plan_cost(ev.modes_from_decisions(decs), batch)
+            _assert_cost_equal(got, want, f"{model}/{env_name}/b{batch}")
+
+
+@pytest.mark.parametrize("model", MODELS)
+def test_incremental_flips_match_full_evaluation(model):
+    """begin() + a random flip sequence must track plan_cost exactly —
+    the repair loop's O(1) delta updates cannot drift."""
+    desc = describe(get_arch(model), get_shape("train_4k"))
+    env = ENVS["multi_pod"]
+    rng = random.Random(7)
+    gran = {op.name: (4 if op.splittable else 1)
+            for op in desc.decidable()}
+    ev = PlanEvaluator(desc, env, gran)
+    ev.begin(np.zeros(ev.n_slices, dtype=np.int8), 256)
+    for step in range(200):
+        j = rng.randrange(ev.n_slices)
+        k = int(ev.slice_op[j])
+        if not desc.operators[k].decidable:
+            continue
+        ev.flip(j, rng.randrange(len(MODES)))
+        if step % 20 == 0:
+            want = plan_cost(desc, ev.decisions(ev.current_modes), 256, env)
+            _assert_cost_equal(ev.result(), want, f"{model}/step{step}")
+    want = plan_cost(desc, ev.decisions(ev.current_modes), 256, env)
+    _assert_cost_equal(ev.result(), want, f"{model}/final")
+
+
+def test_evaluate_plan_accepts_any_plan_cost_plan():
+    """The public one-call wrap must score every plan plan_cost scores —
+    including split decisions on non-decidable operators."""
+    from repro.core.api import evaluate_plan
+    model = get_arch("phi4-mini-3.8b")
+    desc = describe(model, get_shape("train_4k"))
+    decs = {"final_norm": Decision("final_norm", (ZDP, ZDP))}
+    want = plan_cost(desc, decs, 256, ENVS["single_pod"])
+    got = evaluate_plan(model, decs, get_shape("train_4k"),
+                        SINGLE_POD_MESH, global_batch=256)
+    _assert_cost_equal(got, want, "evaluate_plan")
+
+
+def test_all_dp_memory_matches_base_cost():
+    for model in MODELS:
+        desc = describe(get_arch(model), get_shape("train_4k"))
+        env = ENVS["single_pod"]
+        ev = PlanEvaluator(desc, env)
+        for batch in (16, 256):
+            want = plan_cost(desc, uniform_plan(desc, DP), batch, env)
+            assert ev.all_dp_memory(batch) == pytest.approx(
+                want.memory, rel=1e-9)
+
+
+# --- end-to-end golden reference: the pre-optimization search_plan ----------
+
+def _reference_search_plan(desc, global_batch, env, osdp):
+    """The pre-PR2 search_plan: direct plan_cost evaluation everywhere,
+    full O(slices * ops) re-evaluation per repair flip."""
+    items = _build_items(desc, env, osdp)
+    base = plan_cost(desc, uniform_plan(desc, DP), global_batch, env)
+    need = base.memory - osdp.memory_limit_bytes
+    if osdp.search == "dfs":
+        choice, _ = _solve_dfs(items, need)
+    elif osdp.search == "knapsack":
+        choice, _ = _solve_knapsack(items, need)
+    else:
+        choice, _ = _solve_greedy(items, need)
+    choice = list(choice)
+    decisions = _items_to_decisions(desc, items, choice)
+    cost = plan_cost(desc, decisions, global_batch, env)
+    if cost.memory > osdp.memory_limit_bytes:
+        remaining = sorted(
+            (i for i, c in enumerate(choice) if c is None),
+            key=lambda i: min(items[i].extra_time[m]
+                              / max(items[i].savings[m], 1e-9)
+                              for m in items[i].savings))
+        for i in remaining:
+            it = items[i]
+            choice[i] = min(it.savings,
+                            key=lambda m: it.extra_time[m]
+                            / max(it.savings[m], 1e-9))
+            decisions = _items_to_decisions(desc, items, choice)
+            cost = plan_cost(desc, decisions, global_batch, env)
+            if cost.memory <= osdp.memory_limit_bytes:
+                break
+        if cost.memory > osdp.memory_limit_bytes:
+            choice = [max(it.savings, key=it.savings.get) for it in items]
+            decisions = _items_to_decisions(desc, items, choice)
+            cost = plan_cost(desc, decisions, global_batch, env)
+    return decisions, cost
+
+
+# memory limits chosen so each (model, limit) lands in a different
+# regime: comfortable, repair-triggering tight, and infeasible-fallback
+CASES = [
+    ("phi4-mini-3.8b", 64), ("phi4-mini-3.8b", 16), ("phi4-mini-3.8b", 1),
+    ("dbrx-132b", 32), ("dbrx-132b", 12),
+    ("mamba2-2.7b", 8), ("mamba2-2.7b", 2),
+]
+
+
+@pytest.mark.parametrize("solver", ("dfs", "knapsack", "greedy"))
+@pytest.mark.parametrize("model,limit_gib", CASES)
+def test_solvers_match_reference_path(solver, model, limit_gib):
+    desc = describe(get_arch(model), get_shape("train_4k"))
+    env = ENVS["single_pod"]
+    osdp = OSDPConfig(search=solver,
+                      memory_limit_bytes=limit_gib * 2**30,
+                      operator_splitting=True,
+                      default_slice_granularity=4)
+    want_dec, want_cost = _reference_search_plan(desc, 256, env, osdp)
+    got = search_plan(desc, 256, env, osdp)
+    assert got.decisions == want_dec, (model, limit_gib, solver)
+    _assert_cost_equal(got.cost, want_cost, f"{model}/{limit_gib}/{solver}")
+    assert got.feasible == (want_cost.memory <= osdp.memory_limit_bytes)
+
+
+@pytest.mark.parametrize("solver", ("dfs", "knapsack", "greedy"))
+def test_solvers_match_reference_multi_pod(solver):
+    """ZDP_POD adds a second mode per item — the grouped DFS and the
+    vectorized knapsack must still mirror the reference exactly."""
+    desc = describe(get_arch("dbrx-132b"), get_shape("train_4k"))
+    env = ENVS["multi_pod"]
+    osdp = OSDPConfig(search=solver, memory_limit_bytes=24 * 2**30,
+                      operator_splitting=True,
+                      default_slice_granularity=4)
+    want_dec, want_cost = _reference_search_plan(desc, 256, env, osdp)
+    got = search_plan(desc, 256, env, osdp)
+    assert got.decisions == want_dec
+    _assert_cost_equal(got.cost, want_cost, f"multi_pod/{solver}")
+
+
+def test_knapsack_matches_scalar_reference():
+    """Vectorized DP == the scalar list-of-lists DP, choice-for-choice."""
+    from repro.core.search import SliceItem
+
+    def scalar_knapsack(items, need, quantum):
+        n = len(items)
+        if need <= 0:
+            return [None] * n
+        cap = int(-(-need // quantum))
+        INF = float("inf")
+        dp = [INF] * (cap + 1)
+        dp[0] = 0.0
+        parent = [[None] * (cap + 1) for _ in range(n + 1)]
+        for i, it in enumerate(items):
+            ndp = dp[:]
+            npar = [None] * (cap + 1)
+            for m, sav in it.savings.items():
+                q = int(sav // quantum)
+                if q == 0:
+                    continue
+                t = it.extra_time[m]
+                for s in range(cap + 1):
+                    if dp[s] == INF:
+                        continue
+                    s2 = min(cap, s + q)
+                    if dp[s] + t < ndp[s2]:
+                        ndp[s2] = dp[s] + t
+                        npar[s2] = (s, m)
+            dp = ndp
+            parent[i + 1] = npar
+        if dp[cap] == INF:
+            return [max(it.savings, key=it.savings.get) for it in items]
+        choice = [None] * n
+        s = cap
+        for i in range(n, 0, -1):
+            p = parent[i][s]
+            if p is not None:
+                s, m = p
+                choice[i - 1] = m
+        return choice
+
+    rng = random.Random(3)
+    for trial in range(20):
+        n = rng.randrange(3, 30)
+        two_modes = rng.random() < 0.5
+        items = []
+        for i in range(n):
+            sav = {ZDP: rng.uniform(0, 100)}
+            ext = {ZDP: rng.uniform(0.0, 10.0)}
+            if two_modes:
+                sav[ZDP_POD] = rng.uniform(0, 100)
+                ext[ZDP_POD] = rng.uniform(0.0, 10.0)
+            items.append(SliceItem(f"op{i}", 0, 1, sav, ext))
+        total = sum(max(it.savings.values()) for it in items)
+        need = rng.uniform(0.1, 1.2) * total
+        quantum = total / rng.choice([64, 256, 1024])
+        want = scalar_knapsack(items, need, quantum)
+        got, cells = _solve_knapsack(items, need, quantum)
+        assert got == want, (trial, need, quantum)
+        assert cells >= 0
+
+
+def test_grouped_dfs_exact_with_duplicate_items():
+    """Per-layer descriptions collapse into signature groups — the
+    grouped branch-and-bound must still match brute force."""
+    import itertools
+    import math
+    from repro.core.search import SliceItem
+
+    rng = random.Random(11)
+    for trial in range(10):
+        # few distinct signatures, many copies — like per-layer models
+        sigs = [(rng.uniform(1, 50), rng.uniform(0.01, 5.0))
+                for _ in range(rng.randrange(2, 4))]
+        items = []
+        for i in range(12):
+            sav, ext = sigs[rng.randrange(len(sigs))]
+            items.append(SliceItem(f"op{i}", 0, 1, {ZDP: sav}, {ZDP: ext}))
+        total = sum(it.savings[ZDP] for it in items)
+        need = rng.uniform(0.2, 0.95) * total
+        choice, nodes = _solve_dfs(items, need)
+        t = sum(items[i].extra_time[c] for i, c in enumerate(choice) if c)
+        sav = sum(items[i].savings[c] for i, c in enumerate(choice) if c)
+        assert sav >= need - 1e-9
+        best = math.inf
+        for mask in range(1 << len(items)):
+            s = sum(items[i].savings[ZDP] for i in range(len(items))
+                    if mask >> i & 1)
+            if s < need:
+                continue
+            tt = sum(items[i].extra_time[ZDP] for i in range(len(items))
+                     if mask >> i & 1)
+            best = min(best, tt)
+        assert t == pytest.approx(best, rel=1e-9), trial
+        assert nodes > 0
+
+
+def test_solver_effort_is_reported():
+    """nodes_visited: dfs = nodes expanded, knapsack = cells relaxed,
+    greedy = items ranked — all populated for the bench JSON."""
+    desc = describe(get_arch("phi4-mini-3.8b"), get_shape("train_4k"))
+    env = ENVS["single_pod"]
+    for solver in ("dfs", "knapsack", "greedy"):
+        # 4 GiB: below the all-DP footprint, so every solver must work
+        res = search_plan(desc, 256, env, OSDPConfig(
+            search=solver, memory_limit_bytes=4 * 2**30))
+        assert res.nodes_visited > 0, solver
