@@ -43,6 +43,7 @@ SOLVERS = ("dfs", "knapsack", "greedy")
 # the optimized engine so CI only trips on a real regression
 CEILINGS = {
     "nd-96-perlayer": 15.0,
+    "selective-remat": 60.0,
     "llama3-405b": 30.0,
     "arctic-480b": 30.0,
     "hybrid-16dev": 60.0,
@@ -60,37 +61,49 @@ def _gpt(name: str, layers: int, hidden: int) -> ModelConfig:
 
 
 def _search_plan_cases(quick: bool):
-    """(name, desc, env, memory_limit_bytes, global_batch) tuples.
+    """(name, desc, env, memory_limit_bytes, global_batch, checkpointing)
+    tuples.
 
     The llama3-405b / arctic-480b limits sit between the all-DP and
     all-ZDP+split memory of the per-layer description, so every solver
     does real work (cover search + repair) instead of short-circuiting.
+    The selective-remat case times the 4-mode axis (DP/ZDP x
+    remat/no-remat per slice) at per-layer granularity — the widest
+    decision space the engine searches.
     """
     cases = [
         ("nd-96-perlayer", describe(get_arch("phi4-mini-3.8b"),
                                     get_shape("train_4k"), per_layer=True),
          CostEnv(RTX_TITAN_8, MESH_8GPU, checkpointing=False), 8 * 2**30,
-         8),
+         8, False),
+        ("selective-remat", describe(get_arch("phi4-mini-3.8b"),
+                                     get_shape("train_4k"),
+                                     per_layer=True),
+         CostEnv(RTX_TITAN_8, MESH_8GPU, checkpointing=False), 16 * 2**30,
+         8, "selective"),
     ]
     if not quick:
         cases += [
             ("llama3-405b", describe(get_arch("llama3-405b"),
                                      get_shape("train_4k"), per_layer=True),
-             CostEnv(DeviceInfo(), SINGLE_POD_MESH), 240 * 2**30, 256),
+             CostEnv(DeviceInfo(), SINGLE_POD_MESH), 240 * 2**30, 256,
+             True),
             ("arctic-480b", describe(get_arch("arctic-480b"),
                                      get_shape("train_4k"), per_layer=True),
-             CostEnv(DeviceInfo(), SINGLE_POD_MESH), 80 * 2**30, 256),
+             CostEnv(DeviceInfo(), SINGLE_POD_MESH), 80 * 2**30, 256,
+             True),
         ]
     return cases
 
 
-def _run_search_plan_case(name, desc, env, lim, batch, out) -> dict:
+def _run_search_plan_case(name, desc, env, lim, batch, ckpt, out) -> dict:
     solvers: Dict[str, dict] = {}
     total = 0.0
     for solver in SOLVERS:
         osdp = OSDPConfig(search=solver, memory_limit_bytes=lim,
                           operator_splitting=True,
-                          default_slice_granularity=4)
+                          default_slice_granularity=4,
+                          checkpointing=ckpt)
         t0 = time.perf_counter()
         res = search_plan(desc, batch, env, osdp)
         dt = time.perf_counter() - t0
@@ -130,9 +143,9 @@ def _run_hybrid_case(name, desc, device, n_devices, lim, batch, out,
 def _measure(quick: bool, out) -> Dict[str, dict]:
     out("case,n_ops,solver,seconds,step_time_ms,feasible,work")
     results: Dict[str, dict] = {}
-    for name, desc, env, lim, batch in _search_plan_cases(quick):
+    for name, desc, env, lim, batch, ckpt in _search_plan_cases(quick):
         results[name] = _run_search_plan_case(name, desc, env, lim, batch,
-                                              out)
+                                              ckpt, out)
     if quick:
         desc = describe(_gpt("nd-48x1024", 48, 1024),
                         ShapeConfig("paper_b64", 1024, 64, "train"),

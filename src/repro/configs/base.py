@@ -10,7 +10,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 # ---------------------------------------------------------------------------
 # Architecture families
@@ -265,6 +265,11 @@ class DeviceInfo:
         return self.dci_bw if axis == "pod" else self.ici_bw
 
 
+# OSDPConfig.checkpointing value that promotes remat from a global
+# switch into a per-slice searched decision (DP/ZDP x remat/no-remat)
+SELECTIVE = "selective"
+
+
 @dataclass(frozen=True)
 class OSDPConfig:
     """OSDP feature switches for a run."""
@@ -278,8 +283,35 @@ class OSDPConfig:
     # beyond-paper: per-operator slice granularity from the cost model
     # (the paper fixes g=4 and names auto-tuning as future work, §4.3)
     auto_granularity: bool = False
-    checkpointing: bool = True               # remat (affects ZDP cost, §4.3)
+    # remat (affects ZDP cost, §4.3): True/False force the legacy global
+    # setting; "selective" searches remat per slice, jointly with the
+    # sharding mode (4-mode axis; beyond paper)
+    checkpointing: Union[bool, str] = True
     force_mode: Optional[str] = None         # "DP" | "ZDP": bypass search
+
+    def __post_init__(self):
+        if isinstance(self.checkpointing, str) \
+                and self.checkpointing != SELECTIVE:
+            raise ValueError(
+                f"checkpointing={self.checkpointing!r}: the only "
+                f"string value is {SELECTIVE!r} (or use True/False "
+                f"for the global setting)")
+        if self.force_mode and self.selective_remat:
+            raise ValueError(
+                "force_mode bypasses the search, so there is no "
+                "selective-remat axis to decide: combine force_mode "
+                "with checkpointing=True/False")
+
+    @property
+    def selective_remat(self) -> bool:
+        return self.checkpointing == SELECTIVE
+
+    @property
+    def env_checkpointing(self) -> bool:
+        """The CostEnv default-remat bit this config implies: selective
+        searches start from the no-remat base plan; any other truthy
+        value keeps the legacy global-remat behaviour."""
+        return bool(self.checkpointing) and not self.selective_remat
 
 
 @dataclass(frozen=True)

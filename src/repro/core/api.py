@@ -34,9 +34,16 @@ def osdp(model: ModelConfig,
          search: str = "dfs",
          operator_splitting: bool = True,
          slice_granularity: int = 4,
-         checkpointing: bool = True,
+         checkpointing: Union[bool, str] = True,
          force_mode: Optional[str] = None) -> Plan:
-    """Search the optimal sharded-data-parallel plan (paper Alg. 1)."""
+    """Search the optimal sharded-data-parallel plan (paper Alg. 1).
+
+    `checkpointing` accepts the legacy global flags True / False, or
+    "selective" to co-optimize remat per slice with the sharding mode
+    (the 4-mode axis: DP/ZDP x remat/no-remat) — the returned plan's
+    `Decision.remat` then carries the per-slice bits and compiles to a
+    matching `jax.checkpoint` policy via `models.registry.build_model`.
+    """
     cfg = OSDPConfig(
         enabled=True,
         memory_limit_bytes=memory_limit_gib * 2**30,
@@ -59,7 +66,7 @@ def search_hybrid(model: Union[ModelConfig, ModelDescription],
                   search: str = "dfs",
                   operator_splitting: bool = True,
                   slice_granularity: int = 4,
-                  checkpointing: bool = True,
+                  checkpointing: Union[bool, str] = True,
                   force_mode: Optional[str] = None,
                   micro: int = 8,
                   max_tp: int = 0,
@@ -119,6 +126,11 @@ def evaluate_plan(model: Union[ModelConfig, ModelDescription],
     should hold a `PlanEvaluator` directly; this one-call wrap is for
     one-off scoring.
     """
+    if not isinstance(checkpointing, bool):
+        raise ValueError(
+            "evaluate_plan scores a FIXED plan, so checkpointing must "
+            "be the global bool default for inherit slices — encode "
+            "selective remat in the decisions' Decision.remat bits")
     if isinstance(model, ModelDescription):
         desc = model
     else:

@@ -10,12 +10,23 @@ k = 3 for ZDP (two all-gathers + one reduce-scatter); +1 for ZDP when
 activation checkpointing forces a third parameter gather before the
 recompute pass (§4.3).
 
+Activation checkpointing (remat) is a per-slice decision, not only a
+global switch: a `Decision` may carry explicit remat bits per slice
+(the 4-mode axis, DP/ZDP x remat/no-remat).  A remat'd slice trades
+its live activations (b * M_act_i -> /remat_layers) for the ~30%
+recompute compute term and — in ZDP modes — the §4.3 4th parameter
+gather; a no-remat slice keeps its activations and skips both costs.
+`Decision.remat is None` reproduces the legacy global behaviour of
+`CostEnv.checkpointing` byte-for-byte.  The full formula set lives in
+docs/cost_model.md.
+
 Beyond-paper additions, all flagged explicitly:
   * ZDP_POD — hierarchical sharding across only the in-pod `data` axis:
     memory /N_pod-local, collectives stay on fast ICI.
   * per-mode gathered-weight peak (M_extra): in ZDP the un-sharded
     weight must transiently exist; operator splitting divides it by g.
   * MoE awareness: expert FLOPs scale with top-k, not E.
+  * per-slice selective remat (this module + core/search.py), above.
 """
 from __future__ import annotations
 
@@ -36,17 +47,36 @@ ZDP = "ZDP"
 ZDP_POD = "ZDP_POD"      # beyond-paper hierarchical mode
 MODES = (DP, ZDP, ZDP_POD)
 
+# per-slice remat states (the second axis of the 4-mode decision space)
+REMAT_INHERIT = 0        # follow CostEnv.checkpointing (legacy global flag)
+REMAT_OFF = 1            # explicit: keep activations, no recompute
+REMAT_ON = 2             # explicit: rematerialize this slice (§4.3 terms)
+N_REMAT_STATES = 3
+# PlanEvaluator extended column: e = mode_index + len(MODES) * remat_state
+N_EXT = len(MODES) * N_REMAT_STATES
+
 
 @dataclass(frozen=True)
 class Decision:
-    """Plan entry for one operator: per-slice modes.
+    """Plan entry for one operator: per-slice modes (+ remat bits).
 
     `modes` has length 1 for unsplit operators, length g for split ones
-    (paper §3.3: each slice is independently DP or ZDP).
+    (paper §3.3: each slice is independently DP or ZDP).  `remat` is
+    the second decision axis: None means every slice inherits the
+    legacy global `CostEnv.checkpointing` flag; otherwise it holds one
+    entry per slice — True (rematerialize), False (keep activations),
+    or None (inherit) — the searched selective-remat plan.
     """
 
     op: str
     modes: Tuple[str, ...]
+    remat: Optional[Tuple[Optional[bool], ...]] = None
+
+    def __post_init__(self):
+        if self.remat is not None and len(self.remat) != len(self.modes):
+            raise ValueError(
+                f"{self.op}: remat length {len(self.remat)} != "
+                f"modes length {len(self.modes)}")
 
     @property
     def split(self) -> int:
@@ -54,6 +84,28 @@ class Decision:
 
     def uniform(self) -> Optional[str]:
         return self.modes[0] if len(set(self.modes)) == 1 else None
+
+    def remat_states(self) -> Tuple[int, ...]:
+        """Per-slice REMAT_* state (0 inherit / 1 off / 2 on)."""
+        if self.remat is None:
+            return (REMAT_INHERIT,) * self.split
+        return tuple(REMAT_INHERIT if r is None
+                     else (REMAT_ON if r else REMAT_OFF)
+                     for r in self.remat)
+
+    def remat_bits(self, default: bool) -> Tuple[bool, ...]:
+        """Per-slice effective remat with inherits resolved to `default`."""
+        if self.remat is None:
+            return (bool(default),) * self.split
+        return tuple(bool(default) if r is None else bool(r)
+                     for r in self.remat)
+
+    def uniform_remat(self) -> Optional[bool]:
+        """The single explicit remat bit if uniform-explicit, else None."""
+        if self.remat is None or None in self.remat:
+            return None
+        vals = {bool(r) for r in self.remat}
+        return vals.pop() if len(vals) == 1 else None
 
 
 @dataclass(frozen=True)
@@ -113,7 +165,13 @@ class OpCost:
 
 def op_cost(op: OperatorDesc, decision: Decision, batch_per_device: int,
             seq_len: int, env: CostEnv) -> OpCost:
-    """Cost of one operator under `decision` (§3.1 equations)."""
+    """Cost of one operator under `decision` (§3.1 equations + per-slice
+    remat, §4.3).  Decisions without explicit remat bits take the exact
+    legacy code path (byte-identical to the global-flag Profiler)."""
+    if decision.remat is not None and any(r is not None
+                                          for r in decision.remat):
+        return _op_cost_per_slice(op, decision, batch_per_device, seq_len,
+                                  env)
     g = decision.split
     dev = env.device
     tp = env.n_tp
@@ -192,6 +250,109 @@ def op_cost(op: OperatorDesc, decision: Decision, batch_per_device: int,
                   comm_time=comm, compute_time=compute)
 
 
+def _op_cost_per_slice(op: OperatorDesc, decision: Decision,
+                       batch_per_device: int, seq_len: int,
+                       env: CostEnv) -> OpCost:
+    """op_cost for decisions carrying explicit per-slice remat bits.
+
+    Sharding runs still merge by mode only (storage = sharding; remat
+    re-gathers, it does not re-segment the arrays), so the state memory,
+    M_extra, and base collectives match the legacy path.  Per slice:
+
+      * remat ON  — activations / eff_remat_layers live, compute x1.30,
+        and (ZDP modes, training) one extra ring gather over the slice
+        before the recompute pass (§4.3's 4th gather);
+      * remat OFF — full activations live, no recompute, 3 ZDP rounds;
+      * inherit   — the legacy CostEnv.checkpointing scaling.
+    """
+    g = decision.split
+    dev = env.device
+    tp = env.n_tp
+    state_bytes = (op.state_bytes if env.train else op.param_bytes) / tp
+    param_bytes = op.param_bytes / tp
+    tokens = batch_per_device * seq_len
+    act_slice = op.act_bytes_per_token / tp * tokens / g
+    comp_slice = (op.flops_per_token * tokens / tp
+                  / (dev.peak_flops * dev.mxu_efficiency)) / g
+    if env.train:
+        comp_slice *= 3.0
+    rl = op.eff_remat_layers
+    states = decision.remat_states()
+    bits = decision.remat_bits(env.checkpointing)
+
+    act = compute = 0.0
+    for st, r in zip(states, bits):
+        if st == REMAT_INHERIT:
+            act += act_slice / (max(1, op.layers)
+                                if env.checkpointing else 1)
+        elif r:
+            act += act_slice / rl
+        else:
+            act += act_slice
+        compute += comp_slice * (1.30 if r else 1.0)
+
+    runs: List[Tuple[str, List[int]]] = []
+    for j, mode in enumerate(decision.modes):
+        if runs and runs[-1][0] == mode:
+            runs[-1][1].append(j)
+        else:
+            runs.append((mode, [j]))
+
+    mem = 0.0
+    peak = 0.0
+    comm = 0.0
+    for mode, idxs in runs:
+        run_len = len(idxs)
+        s_bytes = state_bytes * run_len / g
+        p_bytes = param_bytes * run_len / g
+        n = shard_ways(mode, env)
+        mem += s_bytes / n
+        if mode == DP:
+            if env.train:
+                comm += 2 * _ring_time(p_bytes, env.n_data, dev.alpha,
+                                       dev.link_bw("data"))
+            continue
+        base_rounds = 3 if env.train else 1
+        alpha_eff = dev.alpha * run_len
+        # maximal remat sub-runs within the sharding run: the §4.3
+        # recompute gather re-fetches exactly the remat'd slices
+        subs: List[int] = []
+        cur = 0
+        for j in idxs:
+            if env.train and bits[j]:
+                cur += 1
+            else:
+                if cur:
+                    subs.append(cur)
+                cur = 0
+        if cur:
+            subs.append(cur)
+        if mode == ZDP:
+            bw = min(dev.link_bw(a) for a in env.mesh.axes
+                     if a in ("pod", "data"))
+            comm += base_rounds * _ring_time(p_bytes, env.n_data,
+                                             alpha_eff, bw)
+            for sl in subs:
+                comm += _ring_time(param_bytes * sl / g, env.n_data,
+                                   dev.alpha * sl, bw)
+        else:  # ZDP_POD: gather on ICI, cross-pod grad all-reduce
+            comm += base_rounds * _ring_time(p_bytes, env.n_data_local,
+                                             alpha_eff,
+                                             dev.link_bw("data"))
+            for sl in subs:
+                comm += _ring_time(param_bytes * sl / g,
+                                   env.n_data_local, dev.alpha * sl,
+                                   dev.link_bw("data"))
+            n_pods = env.n_data // env.n_data_local
+            comm += 2 * _ring_time(p_bytes / env.n_data_local, n_pods,
+                                   dev.alpha, dev.link_bw("pod"))
+        gathered = param_bytes / (max(1, op.layers) * g)
+        mem += gathered
+        peak = max(peak, gathered)
+    return OpCost(memory=mem + act, peak_extra=peak, time=comm + compute,
+                  comm_time=comm, compute_time=compute)
+
+
 @dataclass
 class PlanCost:
     memory: float        # steady per-device bytes
@@ -240,22 +401,33 @@ class PlanEvaluator:
     per batch candidate).  This class precomputes, once per
     (description, env, slice layout):
 
-      * per-slice, per-mode additive terms — sharded state bytes and the
-        run-length-linear part of the collective time (ZDP's per-slice
-        ``alpha`` and everyone's beta term scale with run length, so
-        they distribute exactly over slices),
-      * per-op, per-mode *run* constants — the terms ``op_cost`` charges
-        once per merged same-mode run: the transiently gathered slice
-        (M_extra) for ZDP runs, the 2(N-1)·alpha grad-all-reduce latency
-        for DP runs, the cross-pod alpha for ZDP_POD,
-      * batch slopes — activation and compute scale linearly with the
-        per-device batch, so changing the batch re-uses every table.
+      * per-slice, per-extended-mode additive terms — sharded state
+        bytes and the run-length-linear part of the collective time
+        (ZDP's per-slice ``alpha`` and everyone's beta term scale with
+        run length, so they distribute exactly over slices),
+      * per-op, per-sharding-mode *run* constants — the terms
+        ``op_cost`` charges once per merged same-sharding run: the
+        transiently gathered slice (M_extra) for ZDP runs, the
+        2(N-1)·alpha grad-all-reduce latency for DP runs, the cross-pod
+        alpha for ZDP_POD.  Remat never re-segments storage, so run
+        boundaries depend on the sharding mode only,
+      * per-slice batch slopes — activation and compute scale linearly
+        with the per-device batch AND with each slice's remat state, so
+        changing the batch re-uses every table.
+
+    Slices address an *extended* mode ``e = mode + 3 * remat_state``
+    with remat_state in {REMAT_INHERIT, REMAT_OFF, REMAT_ON}: columns
+    0..2 are the legacy global-flag semantics (byte-compatible with the
+    pre-selective-remat engine), 3..5 force activations kept, 6..8
+    force rematerialization (recompute x1.30 + the §4.3 4th gather in
+    ZDP modes, activations / eff_remat_layers).
 
     A full plan evaluation is then a vectorized table gather, and
-    flipping one slice's mode only touches that slice's additive terms
-    plus the run boundaries next to it: an O(1) update (``begin`` /
-    ``flip``).  Results match ``plan_cost`` to float-summation-order
-    (~1e-12 relative; asserted at 1e-9 by tests/test_plan_evaluator.py).
+    flipping one slice's extended mode only touches that slice's
+    additive terms plus (when the sharding part changes) the run
+    boundaries next to it: an O(1) update (``begin`` / ``flip``).
+    Results match ``plan_cost`` to float-summation-order (~1e-12
+    relative; asserted at 1e-9 by tests/test_plan_evaluator.py).
 
     Slice layout: every operator contributes ``granularity[op.name]``
     slices (default 1 — ``plan_cost``'s layout for missing decisions).
@@ -272,7 +444,13 @@ class PlanEvaluator:
         n_d = env.n_data
         n_l = env.n_data_local
         n_pods = n_d // max(1, n_l)
-        rounds = (3 + (1 if env.checkpointing else 0)) if env.train else 1
+        n_m = len(MODES)
+        # ZDP gather rounds per remat state: inherit follows the env
+        # flag; explicit off/on pin 3 / 4 (§4.3); serving gathers once
+        if env.train:
+            rounds = (3 + (1 if env.checkpointing else 0), 3, 4)
+        else:
+            rounds = (1, 1, 1)
         bw_data = dev.link_bw("data")
         bw_pod = dev.link_bw("pod")
         bw_zdp = min(dev.link_bw(a) for a in env.mesh.axes
@@ -295,55 +473,73 @@ class PlanEvaluator:
         param_b = np.array([op.param_bytes / tp for op in ops])
         layers = np.array([max(1, op.layers) for op in ops],
                           dtype=np.float64)
+        remat_layers = np.array([op.eff_remat_layers for op in ops],
+                                dtype=np.float64)
         self.gathered = param_b / (layers * g)       # per non-DP run M_extra
 
-        # batch slopes (per unit of per-device batch)
-        act = np.array([op.act_bytes_per_token / tp for op in ops]) * seq
-        if env.checkpointing:
-            act = act / layers
-        self._act_slope = float(act.sum())
+        # per-slice batch slopes per remat state (per unit of
+        # per-device batch); independent of the sharding mode
         self._resident_slope = desc.resident_act_bytes_per_token * seq / tp
+        act = np.array([op.act_bytes_per_token / tp for op in ops]) \
+            * seq / g
+        act_states = np.stack(
+            [act / layers if env.checkpointing else act,   # inherit
+             act,                                          # explicit off
+             act / remat_layers], axis=1)                  # explicit on
         comp = np.array([op.flops_per_token for op in ops]) * seq / tp \
-            / (dev.peak_flops * dev.mxu_efficiency)
+            / (dev.peak_flops * dev.mxu_efficiency) / g
         if env.train:
             comp = comp * 3.0
-        if env.checkpointing:
-            comp = comp * 1.30
-        self._comp_slope = float(comp.sum())
+        comp_states = np.stack(
+            [comp * 1.30 if env.checkpointing else comp,
+             comp,
+             comp * 1.30], axis=1)
 
-        # per-op per-mode tables; column order follows MODES
-        mem_op = np.zeros((self.n_ops, len(MODES)))
-        comm_op = np.zeros((self.n_ops, len(MODES)))     # per-slice additive
-        self.mem_run = np.zeros((self.n_ops, len(MODES)))
-        self.comm_run = np.zeros((self.n_ops, len(MODES)))
+        # per-op per-extended-mode tables; e = mode + 3 * remat state
+        mem_op = np.zeros((self.n_ops, n_m))
+        comm_op = np.zeros((self.n_ops, N_EXT))          # per-slice additive
+        self.mem_run = np.zeros((self.n_ops, n_m))
+        self.comm_run = np.zeros((self.n_ops, n_m))
         sliced = param_b / g                              # per-slice bytes
         # DP: states replicated; grads all-reduced over the full data
-        # extent (training only): alpha once per run, beta per slice
+        # extent (training only): alpha once per run, beta per slice;
+        # remat does not change DP collectives
         mem_op[:, 0] = state_b / g
         if env.train and n_d > 1:
-            comm_op[:, 0] = 2 * (n_d - 1) * (sliced / n_d / bw_data)
+            dp_beta = 2 * (n_d - 1) * (sliced / n_d / bw_data)
+            for st in range(N_REMAT_STATES):
+                comm_op[:, 0 + n_m * st] = dp_beta
             self.comm_run[:, 0] = 2 * (n_d - 1) * dev.alpha
         # ZDP: flat gather over pod x data; alpha scales with run length
-        # (chunked execution), so it is fully per-slice
+        # (chunked execution), so it is fully per-slice — including the
+        # remat-state-dependent 4th gather
         mem_op[:, 1] = state_b / g / n_d
         if n_d > 1:
-            comm_op[:, 1] = rounds * (n_d - 1) * (
-                dev.alpha + sliced / n_d / bw_zdp)
+            for st in range(N_REMAT_STATES):
+                comm_op[:, 1 + n_m * st] = rounds[st] * (n_d - 1) * (
+                    dev.alpha + sliced / n_d / bw_zdp)
         self.mem_run[:, 1] = self.gathered
         # ZDP_POD: in-pod gather on ICI + cross-pod grad all-reduce
+        # (the cross-pod grad terms are remat-independent)
         mem_op[:, 2] = state_b / g / max(1, n_l)
         if n_l > 1:
-            comm_op[:, 2] = rounds * (n_l - 1) * (
-                dev.alpha + sliced / n_l / bw_data)
+            for st in range(N_REMAT_STATES):
+                comm_op[:, 2 + n_m * st] = rounds[st] * (n_l - 1) * (
+                    dev.alpha + sliced / n_l / bw_data)
         if n_pods > 1:
-            comm_op[:, 2] += 2 * (n_pods - 1) * (
-                (sliced / n_l) / n_pods / bw_pod)
+            xpod = 2 * (n_pods - 1) * ((sliced / n_l) / n_pods / bw_pod)
+            for st in range(N_REMAT_STATES):
+                comm_op[:, 2 + n_m * st] += xpod
             self.comm_run[:, 2] = 2 * (n_pods - 1) * dev.alpha
         self.mem_run[:, 2] = self.gathered
-        self.mem_slice = mem_op[self.slice_op]
+        # tile/repeat op tables into (n_slices, 9): state-independent
+        # mem cycles over modes; act/comp repeat each state 3x so that
+        # column e = mode + 3*state lands on the right entry
+        self.mem_slice = np.tile(mem_op, (1, N_REMAT_STATES))[self.slice_op]
         self.comm_slice = comm_op[self.slice_op]
+        self.act_slice = np.repeat(act_states, n_m, axis=1)[self.slice_op]
+        self.comp_slice = np.repeat(comp_states, n_m, axis=1)[self.slice_op]
 
-        self._all_dp_static = float(self.mem_slice[:, 0].sum())
         # incremental state (begin/flip)
         self._modes: Optional[np.ndarray] = None
         self._batch = 0
@@ -370,17 +566,24 @@ class PlanEvaluator:
                 raise ValueError(
                     f"{name}: decision split {dec.split} != evaluator "
                     f"layout {int(self.granularity[k])}")
-            for j, m in enumerate(dec.modes):
-                modes[s + j] = index[m]
+            states = dec.remat_states()
+            for j, (m, st) in enumerate(zip(dec.modes, states)):
+                modes[s + j] = index[m] + len(MODES) * st
         return modes
 
     def decisions(self, modes: np.ndarray) -> Dict[str, Decision]:
         out: Dict[str, Decision] = {}
+        n_m = len(MODES)
         for k, name in enumerate(self.op_names):
             s = int(self.op_start[k])
             e = s + int(self.granularity[k])
-            out[name] = Decision(
-                name, tuple(MODES[m] for m in modes[s:e]))
+            ms = tuple(MODES[int(m) % n_m] for m in modes[s:e])
+            states = [int(m) // n_m for m in modes[s:e]]
+            remat = None
+            if any(states):
+                remat = tuple(None if st == REMAT_INHERIT
+                              else st == REMAT_ON for st in states)
+            out[name] = Decision(name, ms, remat)
         return out
 
     # -- vectorized full evaluation ------------------------------------------
@@ -388,40 +591,54 @@ class PlanEvaluator:
     def _bpd(self, global_batch: int) -> int:
         return max(1, global_batch // self.env.n_data)
 
-    def all_dp_memory(self, global_batch: int) -> float:
-        """Steady memory of the all-DP plan (the search's base cost)."""
-        bpd = self._bpd(global_batch)
-        return (self._all_dp_static + self._resident_slope * bpd
-                + self._act_slope * bpd)
+    def all_dp_memory(self, global_batch: int,
+                      remat: Optional[bool] = None) -> float:
+        """Steady memory of the all-DP plan (the search's base cost).
 
-    def _static_sums(self, modes: np.ndarray) -> Tuple[float, float, float]:
-        """(steady memory w/o batch terms, comm seconds, peak extra)."""
+        `remat` None takes the legacy inherit columns (env default);
+        True / False pin the explicit remat state — the selective
+        search's base plan is all-DP all-no-remat (`remat=False`).
+        """
+        st = REMAT_INHERIT if remat is None else (
+            REMAT_ON if remat else REMAT_OFF)
+        e = len(MODES) * st
+        bpd = self._bpd(global_batch)
+        return float(self.mem_slice[:, e].sum()
+                     + (self._resident_slope
+                        + self.act_slice[:, e].sum()) * bpd)
+
+    def _static_sums(self, modes: np.ndarray
+                     ) -> Tuple[float, float, float, float, float]:
+        """(steady memory w/o batch terms, comm seconds, peak extra,
+        act slope, compute slope) for extended-mode array `modes`."""
         idx = np.arange(self.n_slices)
+        shard = modes % len(MODES)
         mem = float(self.mem_slice[idx, modes].sum())
         comm = float(self.comm_slice[idx, modes].sum())
+        act = float(self.act_slice[idx, modes].sum())
+        comp = float(self.comp_slice[idx, modes].sum())
         starts = np.empty(self.n_slices, dtype=bool)
         starts[0] = True
-        np.logical_or(modes[1:] != modes[:-1],
+        np.logical_or(shard[1:] != shard[:-1],
                       self.slice_op[1:] != self.slice_op[:-1],
                       out=starts[1:])
         ops_r = self.slice_op[starts]
-        modes_r = modes[starts]
-        mem += float(self.mem_run[ops_r, modes_r].sum())
-        comm += float(self.comm_run[ops_r, modes_r].sum())
+        shard_r = shard[starts]
+        mem += float(self.mem_run[ops_r, shard_r].sum())
+        comm += float(self.comm_run[ops_r, shard_r].sum())
         nonzero = np.add.reduceat(
-            (modes != 0).astype(np.int64), self.op_start)
+            (shard != 0).astype(np.int64), self.op_start)
         peak = float(self.gathered[nonzero > 0].max()) \
             if bool((nonzero > 0).any()) else 0.0
-        return mem, comm, peak
+        return mem, comm, peak, act, comp
 
     def plan_cost(self, modes: np.ndarray,
                   global_batch: int) -> PlanCost:
         """Full vectorized evaluation — `cost_model.plan_cost` semantics."""
-        mem_s, comm, peak = self._static_sums(modes)
+        mem_s, comm, peak, act_sl, comp_sl = self._static_sums(modes)
         bpd = self._bpd(global_batch)
-        mem = float(mem_s + self._resident_slope * bpd
-                    + self._act_slope * bpd)
-        compute = self._comp_slope * bpd
+        mem = float(mem_s + (self._resident_slope + act_sl) * bpd)
+        compute = comp_sl * bpd
         time = comm + compute
         tokens = global_batch * self.desc.shape.seq_len
         return PlanCost(memory=mem, peak_memory=mem + peak, time=time,
@@ -434,32 +651,38 @@ class PlanEvaluator:
         """Start an incremental evaluation from `modes` (copied)."""
         self._modes = np.asarray(modes, dtype=np.int8).copy()
         self._batch = global_batch
-        mem_s, comm, _ = self._static_sums(self._modes)
+        mem_s, comm, _, act_sl, comp_sl = self._static_sums(self._modes)
         self._mem_static = mem_s
         self._comm = comm
+        self._act_sl = act_sl
+        self._comp_sl = comp_sl
         self._nonzero = np.add.reduceat(
-            (self._modes != 0).astype(np.int64), self.op_start)
+            ((self._modes % len(MODES)) != 0).astype(np.int64),
+            self.op_start)
 
-    def _run_const_window(self, j: int, k: int, mode_j: int) -> \
+    def _run_const_window(self, j: int, k: int, shard_j: int) -> \
             Tuple[float, float]:
         """Run-constant contribution of the boundaries at j and j+1 if
-        slice j had mode `mode_j` (neighbours read from current state)."""
+        slice j had sharding mode `shard_j` (neighbours read from
+        current state; run boundaries ignore the remat state)."""
         modes = self._modes
+        n_m = len(MODES)
         mem = comm = 0.0
         left_same = j > 0 and int(self.slice_op[j - 1]) == k
-        if (not left_same) or int(modes[j - 1]) != mode_j:
-            mem += self.mem_run[k, mode_j]
-            comm += self.comm_run[k, mode_j]
+        if (not left_same) or int(modes[j - 1]) % n_m != shard_j:
+            mem += self.mem_run[k, shard_j]
+            comm += self.comm_run[k, shard_j]
         right = j + 1
         if right < self.n_slices and int(self.slice_op[right]) == k:
-            mr = int(modes[right])
-            if mr != mode_j:
+            mr = int(modes[right]) % n_m
+            if mr != shard_j:
                 mem += self.mem_run[k, mr]
                 comm += self.comm_run[k, mr]
         return mem, comm
 
     def flip(self, j: int, new_mode: int) -> None:
-        """O(1): change slice j's mode in the running evaluation."""
+        """O(1): change slice j's extended mode in the running
+        evaluation (sharding and/or remat state)."""
         assert self._modes is not None, "begin() first"
         old = int(self._modes[j])
         if old == new_mode:
@@ -469,16 +692,24 @@ class PlanEvaluator:
                                   - self.mem_slice[j, old])
         self._comm += float(self.comm_slice[j, new_mode]
                             - self.comm_slice[j, old])
-        mem_b, comm_b = self._run_const_window(j, k, old)
-        mem_a, comm_a = self._run_const_window(j, k, new_mode)
-        self._mem_static += float(mem_a - mem_b)
-        self._comm += float(comm_a - comm_b)
+        self._act_sl += float(self.act_slice[j, new_mode]
+                              - self.act_slice[j, old])
+        self._comp_sl += float(self.comp_slice[j, new_mode]
+                               - self.comp_slice[j, old])
+        n_m = len(MODES)
+        old_s, new_s = old % n_m, new_mode % n_m
+        if old_s != new_s:
+            # only a sharding change can create/destroy run boundaries
+            mem_b, comm_b = self._run_const_window(j, k, old_s)
+            mem_a, comm_a = self._run_const_window(j, k, new_s)
+            self._mem_static += float(mem_a - mem_b)
+            self._comm += float(comm_a - comm_b)
+            self._nonzero[k] += (new_s != 0) - (old_s != 0)
         self._modes[j] = new_mode
-        self._nonzero[k] += (new_mode != 0) - (old != 0)
 
     @property
     def current_modes(self) -> np.ndarray:
-        """Mode indices of the running evaluation (live view)."""
+        """Extended mode indices of the running evaluation (live view)."""
         assert self._modes is not None, "begin() first"
         return self._modes
 
@@ -486,14 +717,14 @@ class PlanEvaluator:
     def memory(self) -> float:
         """Steady per-device bytes of the running evaluation."""
         bpd = self._bpd(self._batch)
-        return (self._mem_static + self._resident_slope * bpd
-                + self._act_slope * bpd)
+        return (self._mem_static
+                + (self._resident_slope + self._act_sl) * bpd)
 
     def result(self) -> PlanCost:
         """PlanCost of the running evaluation (peak recomputed exactly)."""
         bpd = self._bpd(self._batch)
         mem = self.memory
-        compute = self._comp_slope * bpd
+        compute = self._comp_sl * bpd
         time = self._comm + compute
         peak = float(self.gathered[self._nonzero > 0].max()) \
             if bool((self._nonzero > 0).any()) else 0.0
@@ -504,6 +735,15 @@ class PlanEvaluator:
 
 
 # convenience whole-model plans ----------------------------------------------
+
+def count_remat_slices(decisions: Dict[str, Decision],
+                       value: bool = True) -> int:
+    """Slices across a plan whose explicit remat bit equals `value`
+    (inherit slices are never counted)."""
+    return sum(sum(1 for r in (d.remat or ())
+                   if r is not None and bool(r) == value)
+               for d in decisions.values())
+
 
 def uniform_plan(desc: ModelDescription, mode: str,
                  split: int = 1) -> Dict[str, Decision]:
@@ -536,3 +776,49 @@ def zdp_extra_time(op: OperatorDesc, env: CostEnv, mode: str = ZDP) -> float:
     c_dp = op_cost(op, d_dp, 1, 1, env)
     c_z = op_cost(op, d_z, 1, 1, env)
     return c_z.comm_time - c_dp.comm_time
+
+
+# selective-remat per-slice terms (the 4-mode axis item costs) ---------------
+
+def remat_gather_time(op: OperatorDesc, env: CostEnv, mode: str = ZDP,
+                      split: int = 1) -> float:
+    """Seconds of the §4.3 recompute-pass parameter gather for ONE
+    remat'd slice of `op` at granularity `split` (training only; DP
+    recomputes from local weights at no collective cost)."""
+    if not env.train or mode == DP:
+        return 0.0
+    dev = env.device
+    p = op.param_bytes / env.n_tp / max(1, split)
+    if mode == ZDP:
+        n = env.n_data
+        if n <= 1:
+            return 0.0
+        bw = min(dev.link_bw(a) for a in env.mesh.axes
+                 if a in ("pod", "data"))
+        return (n - 1) * (dev.alpha + p / n / bw)
+    if mode == ZDP_POD:
+        n = env.n_data_local
+        if n <= 1:
+            return 0.0
+        return (n - 1) * (dev.alpha + p / n / dev.link_bw("data"))
+    raise ValueError(mode)
+
+
+def remat_act_saving_slope(op: OperatorDesc, env: CostEnv, seq_len: int,
+                           split: int = 1) -> float:
+    """Steady activation bytes ONE remat'd slice stops holding, per unit
+    of per-device batch: act_slice * (1 - 1/eff_remat_layers)."""
+    act_slice = op.act_bytes_per_token / env.n_tp * seq_len / max(1, split)
+    return act_slice * (1.0 - 1.0 / op.eff_remat_layers)
+
+
+def remat_compute_slope(op: OperatorDesc, env: CostEnv, seq_len: int,
+                        split: int = 1) -> float:
+    """Recompute seconds ONE remat'd slice adds, per unit of per-device
+    batch: 30% of the slice's (train) compute."""
+    dev = env.device
+    comp = (op.flops_per_token * seq_len / env.n_tp
+            / (dev.peak_flops * dev.mxu_efficiency)) / max(1, split)
+    if env.train:
+        comp *= 3.0
+    return 0.30 * comp

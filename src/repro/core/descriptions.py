@@ -39,6 +39,14 @@ class OperatorDesc:
     splittable: bool = False       # supports §3.3 operator splitting
     decidable: bool = True         # False -> tiny op, pinned to DP
     layers: int = 1                # how many per-layer instances are stacked
+    # How many peer layer instances share this op's recompute working
+    # set under *explicit per-slice* remat: a remat'd slice keeps
+    # 1/remat_layers of its activations live (one layer's worth).  For
+    # stacked groups this equals `layers`; per-layer descriptions set it
+    # to the model depth so remat'ing layer i doesn't pretend layer i's
+    # activations stay live.  None -> `layers` (the legacy global-flag
+    # scaling, which divides by the op's own stack depth).
+    remat_layers: Optional[int] = None
     # memory of the transiently *gathered* weight in ZDP mode (the §3.3
     # "gigantic tensor" peak); defaults to the full param bytes.
 
@@ -49,6 +57,12 @@ class OperatorDesc:
     @property
     def state_bytes(self) -> int:
         return self.param_count * STATE_BYTES_PER_PARAM
+
+    @property
+    def eff_remat_layers(self) -> int:
+        """Live-fraction divisor for an explicitly remat'd slice."""
+        return max(1, self.remat_layers
+                   if self.remat_layers is not None else self.layers)
 
 
 @dataclass(frozen=True)
@@ -91,18 +105,21 @@ def describe(model: ModelConfig, shape: ShapeConfig,
 
     def add(name: str, params: int, flops_tok: float, act_tok: float,
             splittable: bool = False, decidable: bool = True,
-            layers: int = 1) -> None:
+            layers: int = 1, remat_layers: Optional[int] = None) -> None:
         ops.append(OperatorDesc(name, params, flops_tok, act_tok,
-                                splittable, decidable, layers))
+                                splittable, decidable, layers,
+                                remat_layers))
 
     def add_layer_group(name: str, params_per_layer: int, flops_tok: float,
                         act_tok: float, splittable: bool = False,
                         decidable: bool = True) -> None:
         """A group stacked over L layers (or unrolled if per_layer)."""
         if per_layer:
+            # each per-layer op gathers its own slice (layers=1) but
+            # shares the one-layer-live recompute set with its L peers
             for i in range(L):
                 add(f"layer{i}.{name}", params_per_layer, flops_tok,
-                    act_tok, splittable, decidable)
+                    act_tok, splittable, decidable, remat_layers=L)
         else:
             add(f"layers.{name}", params_per_layer * L, flops_tok * L,
                 act_tok * L, splittable, decidable, layers=L)

@@ -21,6 +21,13 @@ script:
     factorization, GPipe stage boundaries, and the per-operator
     DP/ZDP decisions of the inner search.
 
+The DP residue inherits the full 4-mode decision axis: with
+`OSDPConfig(checkpointing="selective")` the inner Scheduler searches
+remat per slice jointly with DP/ZDP over the residue (its `Decision`s
+carry explicit remat bits), and the factorization sweep's compute-only
+throughput bound drops the 1.30 recompute factor so it stays
+admissible for mixed-remat plans.
+
 The activation collectives are charged in the bandwidth regime
 (alpha dropped): the messages are MB-scale, so (n-1)*alpha is noise
 next to the beta term, and dropping it keeps the hybrid rows directly
@@ -35,7 +42,8 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import DeviceInfo, MeshConfig
-from repro.core.cost_model import (DP, Decision, PlanCost, _ring_time)
+from repro.core.cost_model import (DP, Decision, PlanCost, _ring_time,
+                                   count_remat_slices)
 from repro.core.descriptions import ACT_BYTES, ModelDescription
 
 HYBRID_AXES = ("data", "model", "pipe")
@@ -234,13 +242,18 @@ class HybridPlan:
                     if d.uniform() not in (DP, None))
         n_mixed = sum(1 for d in self.decisions.values()
                       if d.uniform() is None)
+        n_remat = count_remat_slices(self.decisions)
+        remat = (f" remat_slices={n_remat}"
+                 if any(d.remat is not None
+                        for d in self.decisions.values()) else "")
         lines = [
             f"hybrid[{self.desc.model.name}] {self.factorization} "
             f"dp_strategy={self.dp_strategy} "
             f"batch={self.batch_size} micro={self.micro} "
             f"{'feasible' if self.feasible else 'INFEASIBLE'}",
             f"  stages: {self.stage_layers()}",
-            f"  ops={len(self.decisions)} zdp={n_zdp} mixed={n_mixed}",
+            f"  ops={len(self.decisions)} zdp={n_zdp} "
+            f"mixed={n_mixed}{remat}",
             f"  est memory/device = {self.cost.memory / 2**30:.2f} GiB "
             f"(peak {self.cost.peak_memory / 2**30:.2f})",
             f"  est step time = {self.cost.time * 1e3:.2f} ms "

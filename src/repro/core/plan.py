@@ -36,6 +36,7 @@ class Plan:
         lines = [
             f"plan[{self.run.model.name} x {self.run.shape.name}] "
             f"ops={len(self.decisions)} zdp={n_zdp} mixed={n_mixed}",
+            f"  remat: {remat_summary(self.decisions, self.run.osdp)}",
             f"  est memory/device = {self.cost.memory / 2**30:.2f} GiB "
             f"(peak {self.cost.peak_memory / 2**30:.2f})",
             f"  est step time = {self.cost.time * 1e3:.2f} ms "
@@ -46,13 +47,33 @@ class Plan:
         return "\n".join(lines)
 
 
+def remat_summary(decisions: Dict[str, Decision], osdp) -> str:
+    """One-line remat description of a plan: the legacy global flag, or
+    the per-op on/off/mixed counts of a selective plan."""
+    explicit = [d for d in decisions.values()
+                if d.remat is not None
+                and any(r is not None for r in d.remat)]
+    if not explicit:
+        if osdp.selective_remat:
+            return "selective (none set)"
+        return "global on" if osdp.env_checkpointing else "global off"
+    n_on = sum(1 for d in explicit if d.uniform_remat() is True)
+    n_off = sum(1 for d in explicit if d.uniform_remat() is False)
+    n_mix = len(explicit) - n_on - n_off
+    n_inherit = len(decisions) - len(explicit)
+    return (f"selective — {n_on} ops on, {n_off} off, {n_mix} mixed"
+            + (f", {n_inherit} inherit" if n_inherit else ""))
+
+
 def make_plan(run: RunConfig,
               device: Optional[DeviceInfo] = None) -> Plan:
     """Run the OSDP pipeline for a RunConfig with a fixed global batch."""
     device = device or DeviceInfo()
     desc = describe(run.model, run.shape)
+    # selective remat searches from the no-remat base env; bool flags
+    # keep the legacy global-checkpointing environment
     env = CostEnv(device, run.mesh,
-                  checkpointing=run.osdp.checkpointing,
+                  checkpointing=run.osdp.env_checkpointing,
                   train=(run.shape.kind == "train"))
     if not run.osdp.enabled:
         decisions = uniform_plan(desc, DP)

@@ -3,6 +3,15 @@
 Three solvers over the same problem
     min_p  T(p, b)   s.t.  M(p, b) <= M_limit,  p_i in {DP, ZDP[, ZDP_POD]}
 
+With `OSDPConfig(checkpointing="selective")` the per-slice decision
+space widens to the 4-mode axis {DP, ZDP[, ZDP_POD]} x {remat,
+no-remat}: the base plan is all-DP-no-remat and every item offers
+remat'd variants of each sharding mode (plus remat-only), whose
+activation savings and recompute costs are batch-linear — the solvers
+stay unchanged, they just see more choices per item, materialized per
+batch candidate.  `checkpointing=True/False` keep the legacy global
+behaviour byte-for-byte.
+
   * ``dfs``      — the paper's depth-first search with its two pruning
                    rules (memory-exceeded, worse-than-incumbent), made
                    exact-and-fast with branch-and-bound lower bounds,
@@ -38,6 +47,7 @@ change between candidates.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import math
 import time as _time
@@ -47,10 +57,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.configs.base import DeviceInfo, MeshConfig, OSDPConfig
-from repro.core.cost_model import (DP, MODES, ZDP, ZDP_POD, CostEnv,
+from repro.core.cost_model import (DP, MODES, REMAT_INHERIT, REMAT_OFF,
+                                   REMAT_ON, ZDP, ZDP_POD, CostEnv,
                                    Decision, PlanCost, PlanEvaluator,
-                                   plan_cost, uniform_plan,
-                                   zdp_extra_time, zdp_saving)
+                                   plan_cost, remat_act_saving_slope,
+                                   remat_compute_slope, remat_gather_time,
+                                   uniform_plan, zdp_extra_time,
+                                   zdp_saving)
 from repro.core.descriptions import ModelDescription, OperatorDesc
 from repro.core.hybrid import (Factorization, HybridPlan, factorizations,
                                hybrid_step_time, pp_boundary_time,
@@ -58,15 +71,42 @@ from repro.core.hybrid import (Factorization, HybridPlan, factorizations,
                                tp_activation_time)
 
 
+# selective remat widens each item's choice set from sharding modes to
+# (sharding x remat) pairs, keyed "ZDP" / "ZDP+R" / "DP+R" / ...; the
+# "+R" choices rematerialize the slice (keep 1/remat_layers of its
+# activations, pay the ~30% recompute and — sharded — the 4th gather).
+REMAT_KEY = "+R"
+
+
+def _key(mode: str, remat: bool) -> str:
+    return mode + REMAT_KEY if remat else mode
+
+
+def _parse_key(key: str) -> Tuple[str, bool]:
+    if key.endswith(REMAT_KEY):
+        return key[:-len(REMAT_KEY)], True
+    return key, False
+
+
 @dataclass
 class SliceItem:
-    """One decidable unit: an operator slice (whole op if unsplit)."""
+    """One decidable unit: an operator slice (whole op if unsplit).
+
+    `savings` / `extra_time` are the batch-independent parts; the
+    `_slope` dicts (selective remat only) hold the batch-linear parts
+    per unit of per-device batch — activation bytes saved and recompute
+    seconds added scale with b.  `_SearchContext.solve` materializes
+    concrete per-batch items before handing them to the solvers, so the
+    solvers themselves stay batch-agnostic.
+    """
 
     op_name: str
     slice_idx: int
     n_slices: int
-    savings: Dict[str, float]      # mode -> steady bytes saved vs DP
-    extra_time: Dict[str, float]   # mode -> seconds added vs DP
+    savings: Dict[str, float]      # choice -> steady bytes saved vs base
+    extra_time: Dict[str, float]   # choice -> seconds added vs base
+    savings_slope: Dict[str, float] = field(default_factory=dict)
+    extra_time_slope: Dict[str, float] = field(default_factory=dict)
 
 
 @dataclass
@@ -117,6 +157,8 @@ def _build_items(desc: ModelDescription, env: CostEnv,
     modes = [ZDP]
     if osdp.allow_pod_hierarchical and env.mesh.multi_pod:
         modes.append(ZDP_POD)
+    selective = osdp.selective_remat
+    seq = desc.shape.seq_len
     items: List[SliceItem] = []
     for op in desc.decidable():
         if osdp.auto_granularity:
@@ -126,17 +168,79 @@ def _build_items(desc: ModelDescription, env: CostEnv,
                  if (osdp.operator_splitting and op.splittable) else 1)
         sav = {m: zdp_saving(op, env, m, g) / g for m in modes}
         ext = {m: zdp_extra_time(op, env, m) / g for m in modes}
+        if not selective:
+            for j in range(g):
+                items.append(SliceItem(op.name, j, g, sav, ext))
+            continue
+        # 4-mode axis: every sharding choice with and without remat,
+        # plus remat-only (stay DP) when it can actually save memory.
+        # The base (no choice) is (DP, no-remat).
+        act_slope = remat_act_saving_slope(op, env, seq, g)
+        comp_slope = remat_compute_slope(op, env, seq, g)
+        sav_slope: Dict[str, float] = {}
+        ext_slope: Dict[str, float] = {}
+        if act_slope > 0:
+            for m in modes:
+                rk = _key(m, True)
+                sav[rk] = sav[m]
+                ext[rk] = ext[m] + remat_gather_time(op, env, m, g)
+                sav_slope[rk] = act_slope
+                ext_slope[rk] = comp_slope
+            rdp = _key(DP, True)
+            sav[rdp] = 0.0
+            ext[rdp] = 0.0
+            sav_slope[rdp] = act_slope
+            ext_slope[rdp] = comp_slope
         for j in range(g):
-            items.append(SliceItem(op.name, j, g, sav, ext))
+            items.append(SliceItem(op.name, j, g, sav, ext,
+                                   sav_slope, ext_slope))
+    if selective:
+        # remat is orthogonal to sharding: operators pinned to DP
+        # (decidable=False) still choose remat/no-remat — without this
+        # a selective plan could not reach the global-remat memory
+        # floor (e.g. mamba2's conv/gate group holds real activations)
+        for op in desc.operators:
+            if op.decidable:
+                continue
+            act_slope = remat_act_saving_slope(op, env, seq, 1)
+            if act_slope <= 0:
+                continue
+            rdp = _key(DP, True)
+            items.append(SliceItem(
+                op.name, 0, 1, {rdp: 0.0}, {rdp: 0.0},
+                {rdp: act_slope},
+                {rdp: remat_compute_slope(op, env, seq, 1)}))
     return items
 
 
+def _materialize_items(items: List[SliceItem], bpd: int) -> List[SliceItem]:
+    """Fold the batch-linear slopes into concrete per-batch items."""
+    out: List[SliceItem] = []
+    for it in items:
+        if not it.savings_slope and not it.extra_time_slope:
+            out.append(it)
+            continue
+        sav = {m: v + bpd * it.savings_slope.get(m, 0.0)
+               for m, v in it.savings.items()}
+        ext = {m: v + bpd * it.extra_time_slope.get(m, 0.0)
+               for m, v in it.extra_time.items()}
+        out.append(SliceItem(it.op_name, it.slice_idx, it.n_slices,
+                             sav, ext))
+    return out
+
+
 def _items_to_decisions(desc: ModelDescription, items: List[SliceItem],
-                        choice: List[Optional[str]]) -> Dict[str, Decision]:
+                        choice: List[Optional[str]]
+                        ) -> Dict[str, Decision]:
+    """Legacy (2-mode) choices -> decisions; the production path emits
+    decisions through PlanEvaluator.decisions() instead (which also
+    carries the remat axis) — this helper remains the reference shape
+    used by the golden tests."""
     per_op: Dict[str, List[str]] = {}
     for it, c in zip(items, choice):
         per_op.setdefault(it.op_name, [DP] * it.n_slices)
-        per_op[it.op_name][it.slice_idx] = c or DP
+        if c is not None:
+            per_op[it.op_name][it.slice_idx] = _parse_key(c)[0]
     out: Dict[str, Decision] = {}
     for op in desc.operators:
         if op.name in per_op:
@@ -144,12 +248,6 @@ def _items_to_decisions(desc: ModelDescription, items: List[SliceItem],
         else:
             out[op.name] = Decision(op.name, (DP,))
     return out
-
-
-def _base_cost(desc: ModelDescription, batch: int,
-               env: CostEnv) -> PlanCost:
-    """Cost of the all-DP plan — the reference the items perturb."""
-    return plan_cost(desc, uniform_plan(desc, DP), batch, env)
 
 
 def _best_mode(it: SliceItem) -> str:
@@ -232,6 +330,32 @@ def _solve_dfs(items: List[SliceItem], need: float,
         suffix_ratio[li] = min(suffix_ratio[li + 1],
                                ext / max(sav, 1e-9))
 
+    # fractional (LP) suffix bound: cheapest fractional cover of the
+    # remaining need by levels >= li, each level capped at its full
+    # group capacity (relaxes mode exclusivity and group sharing —
+    # admissible).  Far stronger than need x best-remaining-ratio when
+    # the cheap levels have small capacity, which is exactly what blows
+    # up the 4-mode (selective remat) tree: 5 incomparable modes per
+    # signature would otherwise branch near-unpruned.
+    frac_tables: List[Tuple[List[float], List[float], List[float]]] = []
+    for li in range(L + 1):
+        lvls = sorted((ext / max(sav, 1e-9), k * sav)
+                      for _, _, sav, ext, k, _ in levels[li:] if sav > 0)
+        cum_s, cum_c = [0.0], [0.0]
+        for r, cap in lvls:
+            cum_s.append(cum_s[-1] + cap)
+            cum_c.append(cum_c[-1] + r * cap)
+        frac_tables.append((cum_s, cum_c, [r for r, _ in lvls]))
+
+    def frac_bound(li: int, need_rem: float) -> float:
+        if need_rem <= 0:
+            return 0.0
+        cum_s, cum_c, ratios = frac_tables[li]
+        if need_rem > cum_s[-1]:
+            return float("inf")
+        j = bisect.bisect_left(cum_s, need_rem)
+        return cum_c[j - 1] + (need_rem - cum_s[j - 1]) * ratios[j - 1]
+
     best_time = inc_time
     best_counts: Optional[List[int]] = None
     counts = [0] * L
@@ -266,14 +390,17 @@ def _solve_dfs(items: List[SliceItem], need: float,
             if (saved + rem * inner_max[li]
                     + suffix_group_sav[gi + 1] < need):
                 continue
-            # prune: admissible lower bound on remaining time
-            if t + (need - saved) * suffix_ratio[li] >= best_time:
+            # prune: admissible lower bound on remaining time (cheap
+            # best-ratio test first, then the fractional-cover bound)
+            if (t + (need - saved) * suffix_ratio[li] >= best_time
+                    or t + frac_bound(li, need - saved) >= best_time):
                 continue
             nodes += 1
             if nodes > node_budget:
                 break
         # re-check the bound when revisiting (incumbent may have improved)
-        elif t + (need - saved) * suffix_ratio[li] >= best_time:
+        elif (t + (need - saved) * suffix_ratio[li] >= best_time
+              or t + frac_bound(li, need - saved) >= best_time):
             counts[li] = 0
             continue
         c = c_max_at(li, rem, saved) - bi
@@ -423,7 +550,15 @@ class _SearchContext:
         self.desc = desc
         self.env = env
         self.osdp = osdp
+        self.selective = osdp.selective_remat
+        if self.selective and env.checkpointing:
+            raise ValueError(
+                "selective remat expects CostEnv(checkpointing=False): "
+                "the search's base plan keeps activations and turns "
+                "remat on per slice")
         self.items = _build_items(desc, env, osdp)
+        self._has_slopes = any(it.savings_slope or it.extra_time_slope
+                               for it in self.items)
         gran = {it.op_name: it.n_slices for it in self.items}
         self.ev = PlanEvaluator(desc, env, gran)
         op_index = {name: k for k, name in enumerate(self.ev.op_names)}
@@ -432,37 +567,74 @@ class _SearchContext:
              for it in self.items], dtype=np.int64)
         self.mode_idx = {m: i for i, m in enumerate(MODES)}
 
-    def _modes_of(self, choice: List[Optional[str]]) -> np.ndarray:
-        modes = np.zeros(self.ev.n_slices, dtype=np.int8)
-        for i, c in enumerate(choice):
-            if c is not None:
-                modes[self.item_slice[i]] = self.mode_idx[c]
-        return modes
+    def _mirror_items(self, remat_on: bool) -> Tuple[List[SliceItem],
+                                                     np.ndarray]:
+        """Legacy 2-mode items for a uniform-remat mirror problem
+        (lazily built and cached), plus their evaluator slice map."""
+        attr = "_mirror_on" if remat_on else "_mirror_off"
+        cached = getattr(self, attr, None)
+        if cached is not None:
+            return cached
+        env = dataclasses.replace(self.env, checkpointing=remat_on)
+        osdp = dataclasses.replace(self.osdp, checkpointing=remat_on)
+        items = _build_items(self.desc, env, osdp)
+        op_index = {name: k for k, name in enumerate(self.ev.op_names)}
+        item_slice = np.array(
+            [int(self.ev.op_start[op_index[it.op_name]]) + it.slice_idx
+             for it in items], dtype=np.int64)
+        if any(int(it.n_slices) != int(
+                self.ev.granularity[op_index[it.op_name]])
+                for it in items):
+            raise ValueError("mirror granularity mismatch")
+        setattr(self, attr, (items, item_slice))
+        return items, item_slice
 
-    def solve(self, global_batch: int) -> SearchResult:
-        t0 = _time.perf_counter()
-        osdp = self.osdp
-        limit = osdp.memory_limit_bytes
-        items = self.items
-        need = self.ev.all_dp_memory(global_batch) - limit
-        if osdp.search == "dfs":
-            choice, nodes = _solve_dfs(items, need)
-        elif osdp.search == "knapsack":
-            choice, nodes = _solve_knapsack(items, need)
-        elif osdp.search == "greedy":
+    def _ext_index(self, choice_key: str, state_map) -> int:
+        """Extended evaluator column for one item choice key."""
+        m, r = _parse_key(choice_key)
+        return self.mode_idx[m] + len(MODES) * state_map(r)
+
+    def _solve_once(self, global_batch: int, items: List[SliceItem],
+                    item_slice: np.ndarray, base_modes: np.ndarray,
+                    need: float, state_map, solver: str,
+                    node_budget: int,
+                    quantum: Optional[float] = None) -> SearchResult:
+        """One covering solve + repair on a prepared problem.
+
+        `base_modes` is the extended-mode array the choices overlay;
+        `state_map` maps each choice key's remat flag to the evaluator
+        remat state (inherit for legacy runs, explicit off/on for
+        selective and the uniform mirrors).
+        """
+        limit = self.osdp.memory_limit_bytes
+        if solver == "dfs":
+            choice, nodes = _solve_dfs(items, need, node_budget)
+        elif solver == "knapsack":
+            choice, nodes = (_solve_knapsack(items, need, quantum)
+                             if quantum else _solve_knapsack(items, need))
+        elif solver == "greedy":
             choice, _ = _solve_greedy(items, need)
             nodes = len(items)
         else:
-            raise ValueError(f"unknown solver {osdp.search!r}")
+            raise ValueError(f"unknown solver {solver!r}")
+
+        def modes_of(ch):
+            modes = base_modes.copy()
+            for i, c in enumerate(ch):
+                if c is not None:
+                    modes[item_slice[i]] = self._ext_index(c, state_map)
+            return modes
 
         ev = self.ev
-        ev.begin(self._modes_of(choice), global_batch)
+        ev.begin(modes_of(choice), global_batch)
 
         # Repair: per-slice savings are exact for uniform runs but
         # slightly optimistic for mixed ones (each ZDP run re-gathers a
         # slice), so the Profiler's evaluation can come out a hair over
-        # the limit. Flip the cheapest remaining DP slices until the
-        # evaluation fits — each flip is an O(1) evaluator delta.
+        # the limit. Flip the cheapest remaining base slices until the
+        # evaluation fits — each flip is an O(1) evaluator delta, and
+        # under selective remat it may flip remat independently of
+        # sharding (whatever the item's cheapest remaining choice is).
         if ev.memory > limit:
             remaining = sorted(
                 (i for i, c in enumerate(choice) if c is None),
@@ -470,21 +642,89 @@ class _SearchContext:
             for i in remaining:
                 m = _best_mode(items[i])
                 choice[i] = m
-                ev.flip(int(self.item_slice[i]), self.mode_idx[m])
+                ev.flip(int(item_slice[i]), self._ext_index(m, state_map))
                 if ev.memory <= limit:
                     break
             if ev.memory > limit:
-                # escalate every slice to its max-saving mode (ZDP) —
-                # the most-sharded plan is the feasibility frontier
+                # escalate every slice to its max-saving mode (ZDP,
+                # remat'd under selective) — the most-sharded plan is
+                # the feasibility frontier
                 choice = [max(it.savings, key=it.savings.get)
                           for it in items]
-                ev.begin(self._modes_of(choice), global_batch)
+                ev.begin(modes_of(choice), global_batch)
 
         cost = ev.result()
         decisions = ev.decisions(ev.current_modes)
         return SearchResult(decisions, cost, global_batch,
-                            bool(cost.memory <= limit), osdp.search,
-                            _time.perf_counter() - t0, nodes)
+                            bool(cost.memory <= limit), self.osdp.search,
+                            0.0, nodes)
+
+    def solve(self, global_batch: int) -> SearchResult:
+        t0 = _time.perf_counter()
+        osdp = self.osdp
+        limit = osdp.memory_limit_bytes
+        bpd = self.ev._bpd(global_batch)
+        n_m = len(MODES)
+
+        if not self.selective:
+            base = np.zeros(self.ev.n_slices, dtype=np.int8)
+            need = self.ev.all_dp_memory(global_batch) - limit
+            res = self._solve_once(
+                global_batch, self.items, self.item_slice, base, need,
+                lambda r: REMAT_INHERIT, osdp.search, 2_000_000)
+            res.search_seconds = _time.perf_counter() - t0
+            return res
+
+        # Selective remat solves three covering problems and keeps the
+        # best: the full 4-mode search (bounded B&B effort — near the
+        # feasibility frontier the 5-choice tree is genuinely hard),
+        # plus the two uniform-remat mirrors (cheap legacy 2-mode
+        # problems evaluated on the explicit columns).  The mirrors
+        # guarantee the selective plan never loses to either global
+        # checkpointing setting, whatever the solver budget did.
+        base_off = np.zeros(self.ev.n_slices, dtype=np.int8)
+        base_off[self.item_slice] = n_m * REMAT_OFF
+        need_off = self.ev.all_dp_memory(global_batch, False) - limit
+        items = (_materialize_items(self.items, bpd)
+                 if self._has_slopes else self.items)
+        # per-slice remat savings can be far below the legacy 16 MiB
+        # knapsack quantum (one slice of one layer's activations), and
+        # each item loses up to one quantum to round-down — so the
+        # 4-mode knapsack sizes its grid from the coverage headroom:
+        # n/2 expected quanta of loss must fit inside it, else a
+        # coverable need quantizes to "uncoverable"
+        quantum = None
+        if need_off > 0 and items:
+            headroom = (sum(max(it.savings.values()) for it in items)
+                        - need_off)
+            quantum = min(16 * 2.0**20,
+                          max(2.0**16, headroom / len(items),
+                              need_off / 65536))
+        best = self._solve_once(
+            global_batch, items, self.item_slice, base_off, need_off,
+            lambda r: REMAT_ON if r else REMAT_OFF, osdp.search, 10_000,
+            quantum)
+        nodes = best.nodes_visited
+
+        mirrors = [(False, base_off, need_off)]
+        base_on = base_off.copy()
+        base_on[self.item_slice] = n_m * REMAT_ON
+        mirrors.append((True, base_on,
+                        self.ev.all_dp_memory(global_batch, True) - limit))
+        for remat_on, base, need in mirrors:
+            m_items, m_slice = self._mirror_items(remat_on)
+            st = REMAT_ON if remat_on else REMAT_OFF
+            res = self._solve_once(
+                global_batch, m_items, m_slice, base, need,
+                lambda r, st=st: st, osdp.search, 2_000_000)
+            nodes += res.nodes_visited
+            if (res.feasible and
+                    (not best.feasible
+                     or res.cost.throughput > best.cost.throughput)):
+                best = res
+        best.nodes_visited = nodes
+        best.search_seconds = _time.perf_counter() - t0
+        return best
 
 
 def search_plan(desc: ModelDescription, global_batch: int, env: CostEnv,
@@ -597,9 +837,11 @@ def search_hybrid(desc: ModelDescription, device: DeviceInfo,
     n_layers = max(1, desc.model.n_layers)
 
     # admissible throughput upper bound: the inner step time is at
-    # least the residue's compute time (the only mode-independent term)
+    # least the residue's compute time (the only mode-independent term;
+    # under selective remat the bound drops the 1.30 recompute factor —
+    # a fully-no-remat plan is reachable, so 1.0x stays admissible)
     flops_tok = sum(op.flops_per_token for op in desc.operators)
-    comp_unit = seq * 3.0 * (1.30 if osdp.checkpointing else 1.0) \
+    comp_unit = seq * 3.0 * (1.30 if osdp.env_checkpointing else 1.0) \
         / (device.peak_flops * device.mxu_efficiency)
 
     def thr_bound(f: Factorization) -> float:
@@ -613,7 +855,8 @@ def search_hybrid(desc: ModelDescription, device: DeviceInfo,
         return best_b
 
     admissible = [f for f in candidates if f.pp <= n_layers]
-    admissible.sort(key=thr_bound, reverse=True)
+    bounds = {f: thr_bound(f) for f in admissible}
+    admissible.sort(key=bounds.__getitem__, reverse=True)
 
     variants = [osdp]
     if osdp.force_mode is None and osdp.operator_splitting:
@@ -629,7 +872,7 @@ def search_hybrid(desc: ModelDescription, device: DeviceInfo,
 
     for f in admissible:
         # dominance pruning: an incumbent nothing here can beat
-        if best is not None and (thr_bound(f) * (1 + 1e-9)
+        if best is not None and (bounds[f] * (1 + 1e-9)
                                  <= best.cost.throughput):
             continue
         mp = f.tp * f.pp
@@ -637,7 +880,8 @@ def search_hybrid(desc: ModelDescription, device: DeviceInfo,
         if sub is None:
             sub = slice_cache[mp] = slice_description(desc, f.tp, f.pp)
         env = CostEnv(device, MeshConfig((f.dp, 1), ("data", "model")),
-                      checkpointing=osdp.checkpointing, include_tp=False)
+                      checkpointing=osdp.env_checkpointing,
+                      include_tp=False)
         local: Optional[HybridPlan] = None
         for vi, cfg in enumerate(variants):
             key = (f.dp, mp, vi)

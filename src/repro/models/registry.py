@@ -27,7 +27,8 @@ from repro.core.cost_model import Decision
 from repro.core.plan import Plan, batch_axes
 from repro.models.common import attn_geometry
 from repro.models.transformer import Model, build_specs
-from repro.sharding.specs import ParamSet, build_param_set
+from repro.sharding.specs import (ParamSet, build_param_set,
+                                  saved_activation_names)
 
 # VLM stub: patch-embedding budget per sequence (see configs/qwen2_vl_2b)
 N_PATCHES = 256
@@ -67,12 +68,34 @@ def build_model(run: RunConfig, plan: Optional[Plan] = None,
                            jax.random.PRNGKey(run.seed), abstract=True)
     geom = attn_geometry(cfg, tp) if cfg.has_attention else None
     model = Model(cfg=cfg, geom=geom, pset=pset, decisions=decisions,
-                  remat=run.osdp.checkpointing,
+                  remat=_remat_policy(run, decisions, pset),
                   swa_window=(run.swa_window
                               if run.shape.name == "long_500k"
                               and not cfg.sliding_window else 0),
                   residual_sharding=_residual_sharding(run, mesh))
     return Built(model=model, pset_abstract=pset, run=run, mesh=mesh)
+
+
+def _remat_policy(run: RunConfig, decisions: Dict[str, Decision],
+                  pset: ParamSet):
+    """Compile the plan's remat axis into Model.remat.
+
+    Legacy plans (no explicit per-slice bits) keep the global flag.
+    Selective plans compile to the tuple of checkpoint_name tags whose
+    activations the jax.checkpoint policy must SAVE (everything else is
+    rematerialized); all-keep plans drop the checkpoint entirely and
+    all-remat plans fall back to the plain full checkpoint.
+    """
+    default = run.osdp.env_checkpointing
+    if not decisions or not any(d.remat is not None
+                                for d in decisions.values()):
+        return default
+    saved, any_remat = saved_activation_names(pset.layouts, default)
+    if not any_remat:
+        return False
+    if not saved:
+        return True
+    return saved
 
 
 def _residual_sharding(run: RunConfig, mesh: Optional[Mesh]):

@@ -20,7 +20,7 @@ from __future__ import annotations
 import dataclasses
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -151,7 +151,11 @@ class Model:
     geom: Optional[AttnGeom]
     pset: ParamSet
     decisions: Dict[str, Decision]
-    remat: bool = True
+    # True = full per-layer jax.checkpoint, False = keep everything, or
+    # a tuple of checkpoint_name tags to SAVE (selective per-slice
+    # remat plans — everything un-named is rematerialized); see
+    # models.registry._remat_policy / sharding.specs.seg_matmul tags
+    remat: Union[bool, Tuple[str, ...]] = True
     swa_window: int = 0          # override window for long-context decode
     # residual-stream sharding (batch over data, d over model). Without
     # this GSPMD lets the ZDP embedding's d-over-data sharding evict the
@@ -188,6 +192,17 @@ class Model:
         bias = lp.get(prefix + "_bias") if self.cfg.norm == "layernorm" \
             else None
         return norm(self.cfg, x, lp[prefix + "_scale"], bias)
+
+    def _checkpoint(self, body):
+        """Wrap a scan body per the plan's remat axis: full checkpoint,
+        none, or a save-only-these-names selective policy."""
+        if self.remat is True:
+            return jax.checkpoint(body)
+        if self.remat:   # tuple of checkpoint_name tags to save
+            return jax.checkpoint(
+                body, policy=jax.checkpoint_policies.save_only_these_names(
+                    *self.remat))
+        return body
 
     # -- embedding ----------------------------------------------------------
     def embed(self, params: Dict[str, jax.Array], batch: Dict[str, jax.Array]
@@ -274,8 +289,7 @@ class Model:
             x = self._constrain(x)
             return (x, aux + a), None
 
-        if self.remat:
-            body = jax.checkpoint(body)
+        body = self._checkpoint(body)
         (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
                                    layer_params)
         return x, aux
@@ -444,8 +458,7 @@ class Model:
                 x = x + ffn_mod.ffn_forward(cfg, self.pset, lp, h)
             return x, new
 
-        if self.remat:
-            body = jax.checkpoint(body)
+        body = self._checkpoint(body)
         x, caches = jax.lax.scan(body, x, layer_params)
         logits = self.logits(params, x[:, -1:])
         return logits, caches

@@ -28,6 +28,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.ad_checkpoint import checkpoint_name
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.cost_model import DP, ZDP, ZDP_POD, Decision
@@ -56,6 +57,13 @@ class Segment:
     start: int
     size: int
     key: str          # leaf name suffix ("" if single segment)
+    # per-segment remat resolved from the plan's Decision.remat bits:
+    # True = recompute this segment's activations, False = keep them,
+    # None = inherit the run's global checkpointing default.  Segments
+    # merge by sharding mode (storage), so a segment spanning slices
+    # with mixed remat bits resolves to True (recompute — the
+    # memory-safe direction).
+    remat: Optional[bool] = None
 
 
 @dataclass
@@ -70,11 +78,16 @@ class SegLayout:
         return len(self.segments) > 1
 
 
-def _merge_modes(modes: Sequence[str], dim: int) -> List[Tuple[str, int, int]]:
-    """Merge adjacent equal-mode slices -> [(mode, start, size)].
+def _merge_modes(modes: Sequence[str], dim: int
+                 ) -> List[Tuple[str, int, int, Tuple[int, ...]]]:
+    """Merge adjacent equal-mode slices
+    -> [(mode, start, size, contributing_slice_indices)].
 
     The slice boundaries quantize `dim` into len(modes) near-equal
     chunks, rounded to multiples of 128 where possible (MXU alignment).
+    The index tuple records which plan slices actually contribute bytes
+    to the merged segment (zero-width slices are excluded, so their
+    remat bits cannot contaminate per-slice remat resolution).
     """
     g = len(modes)
     bounds = [0]
@@ -84,16 +97,34 @@ def _merge_modes(modes: Sequence[str], dim: int) -> List[Tuple[str, int, int]]:
             b = round(b / 128) * 128
         bounds.append(min(max(b, bounds[-1]), dim))
     bounds.append(dim)
-    out: List[Tuple[str, int, int]] = []
-    for m, s, e in zip(modes, bounds[:-1], bounds[1:]):
+    out: List[Tuple[str, int, int, Tuple[int, ...]]] = []
+    for j, (m, s, e) in enumerate(zip(modes, bounds[:-1], bounds[1:])):
         if e <= s:
             continue
         if out and out[-1][0] == m:
-            pm, ps, psz = out[-1]
-            out[-1] = (pm, ps, psz + (e - s))
+            pm, ps, psz, pidx = out[-1]
+            out[-1] = (pm, ps, psz + (e - s), pidx + (j,))
         else:
-            out.append((m, s, e - s))
-    return out or [(modes[0], 0, dim)]
+            out.append((m, s, e - s, (j,)))
+    return out or [(modes[0], 0, dim, tuple(range(g)))]
+
+
+def _segment_remat(decision: Optional[Decision],
+                   idxs: Sequence[int]) -> Optional[bool]:
+    """Resolve one merged segment's remat bit from the plan slices that
+    contribute bytes to it: uniform -> that bit, mixed -> True
+    (recompute is the memory-safe approximation), no explicit bits ->
+    None (inherit)."""
+    if decision is None or decision.remat is None:
+        return None
+    bits = set(decision.remat[j] for j in idxs)
+    if bits == {True}:
+        return True
+    if bits == {False}:
+        return False
+    if bits == {None}:
+        return None
+    return True
 
 
 def layout_for(spec: WeightSpec,
@@ -101,15 +132,19 @@ def layout_for(spec: WeightSpec,
     modes = decision.modes if decision is not None else (DP,)
     if spec.zdp_axis is None or len(modes) == 1:
         mode = modes[0] if spec.zdp_axis is not None else DP
-        return SegLayout(spec, [Segment(mode, 0, spec.shape[spec.zdp_axis]
-                                        if spec.zdp_axis is not None
-                                        else 0, "")])
+        return SegLayout(spec, [Segment(
+            mode, 0, spec.shape[spec.zdp_axis]
+            if spec.zdp_axis is not None else 0, "",
+            _segment_remat(decision, range(len(modes))))])
     dim = spec.shape[spec.zdp_axis]
     merged = _merge_modes(list(modes), dim)
     if len(merged) == 1:
-        return SegLayout(spec, [Segment(merged[0][0], 0, dim, "")])
-    return SegLayout(spec, [Segment(m, s, z, f"@{i}")
-                            for i, (m, s, z) in enumerate(merged)])
+        m, _, _, idxs = merged[0]
+        return SegLayout(spec, [Segment(m, 0, dim, "",
+                                        _segment_remat(decision, idxs))])
+    return SegLayout(spec, [Segment(m, s, z, f"@{i}",
+                                    _segment_remat(decision, idxs))
+                            for i, (m, s, z, idxs) in enumerate(merged)])
 
 
 def _zdp_axes_names(mode: str, mesh: Mesh) -> Optional[Tuple[str, ...]]:
@@ -273,6 +308,38 @@ def stage_weight_specs(specs: Sequence[WeightSpec],
     return out
 
 
+# --- selective-remat checkpoint policy ---------------------------------------
+
+def saved_activation_names(layouts: Dict[str, SegLayout],
+                           default_remat: bool
+                           ) -> Tuple[Tuple[str, ...], bool]:
+    """(names whose activations the jax.checkpoint policy should save,
+    whether anything remats at all) for a materialized plan.
+
+    `seg_matmul` tags each segment's output with `checkpoint_name`:
+    per-leaf names for output-dim (concat) segments, the bare weight
+    path for the combined output (single-segment and input-dim-sum
+    cases — where per-slice saving isn't representable, the whole
+    output is saved only if every slice keeps its activations).
+    Unresolved (inherit) segments follow `default_remat`.
+    """
+    saved: List[str] = []
+    any_remat = False
+    for path, lay in layouts.items():
+        kept = []
+        for seg in lay.segments:
+            r = bool(default_remat) if seg.remat is None else seg.remat
+            if r:
+                any_remat = True
+                kept.append(False)
+            else:
+                saved.append(path + seg.key)
+                kept.append(True)
+        if len(lay.segments) > 1 and all(kept):
+            saved.append(path)    # sum-variant tag on the whole output
+    return tuple(sorted(set(saved))), any_remat
+
+
 # --- helpers used by model forward passes -----------------------------------
 
 def gather_weight(params: Dict[str, jax.Array], pset: ParamSet,
@@ -304,11 +371,15 @@ def seg_matmul(x: jax.Array, params: Dict[str, jax.Array], pset: ParamSet,
     """
     segs = pset.segments(path)
     spec = pset.layouts[path].spec
+    # outputs are tagged with checkpoint_name so a selective-remat plan
+    # compiles to a save_only_these_names policy (identity otherwise)
     if len(segs) == 1:
-        return _contract(x, params[segs[0][0]], in_axis_in_weight)
+        return checkpoint_name(
+            _contract(x, params[segs[0][0]], in_axis_in_weight), path)
     zdp_local = spec.zdp_axis - (1 if spec.stacked else 0)
     if zdp_local == in_axis_in_weight:
-        # sum variant (input-dim split, Figure 4)
+        # sum variant (input-dim split, Figure 4): partial sums are
+        # full-size, so only the combined output carries a name
         y = None
         off = 0
         for leaf, seg in segs:
@@ -316,9 +387,11 @@ def seg_matmul(x: jax.Array, params: Dict[str, jax.Array], pset: ParamSet,
             part = _contract(xs, params[leaf], in_axis_in_weight)
             y = part if y is None else y + part
             off += seg.size
-        return y
-    # concat variant (output-dim split)
-    parts = [_contract(x, params[leaf], in_axis_in_weight)
+        return checkpoint_name(y, path)
+    # concat variant (output-dim split): per-segment names, so remat
+    # stays a per-slice choice in the executed program
+    parts = [checkpoint_name(_contract(x, params[leaf], in_axis_in_weight),
+                             leaf)
              for leaf, _ in segs]
     return jnp.concatenate(parts, axis=-1)
 

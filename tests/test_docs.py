@@ -1,0 +1,76 @@
+"""Docs can't rot: extract and execute the ```python code blocks in
+README.md and docs/*.md.
+
+Rules (see docs/cost_model.md header):
+  * blocks fenced ```python are executed, in order, in one namespace
+    per file — later blocks may use names from earlier ones;
+  * REPL-style blocks (>>> / ...) are executed with the prompts
+    stripped; their printed-output lines are ignored, only the code
+    must run;
+  * a fence info string containing `no-exec` (```python no-exec)
+    marks an illustrative snippet that is skipped.
+"""
+import re
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_FILES = sorted([ROOT / "README.md", *(ROOT / "docs").glob("*.md")])
+
+_FENCE = re.compile(r"^```(\S*)[ \t]*(.*)$")
+
+
+def _python_blocks(text: str):
+    """[(start_line, code)] for executable python fences."""
+    blocks = []
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = _FENCE.match(lines[i])
+        if m and m.group(1).startswith("python"):
+            info = (m.group(1) + " " + m.group(2)).strip()
+            start = i + 1
+            body = []
+            i += 1
+            while i < len(lines) and not lines[i].startswith("```"):
+                body.append(lines[i])
+                i += 1
+            if "no-exec" not in info:
+                blocks.append((start, "\n".join(body)))
+        i += 1
+    return blocks
+
+
+def _strip_repl(code: str) -> str:
+    """Convert >>>-style blocks to plain code, dropping output lines."""
+    if ">>>" not in code:
+        return code
+    out = []
+    for line in code.splitlines():
+        s = line.lstrip()
+        if s.startswith(">>> "):
+            out.append(s[4:])
+        elif s.startswith("... "):
+            out.append(s[4:])
+        elif s in (">>>", "..."):
+            out.append("")
+        # anything else is expected output: ignored
+    return "\n".join(out)
+
+
+@pytest.mark.parametrize(
+    "path", DOC_FILES, ids=[p.name for p in DOC_FILES])
+def test_doc_code_blocks_execute(path):
+    blocks = _python_blocks(path.read_text())
+    if not blocks:
+        pytest.skip(f"{path.name}: no executable python blocks")
+    ns = {"__name__": f"doc_{path.stem}"}
+    for start, code in blocks:
+        code = _strip_repl(code)
+        try:
+            exec(compile(code, f"{path.name}:{start}", "exec"), ns)
+        except Exception as e:   # pragma: no cover - failure reporting
+            pytest.fail(
+                f"{path.name} code block at line {start} failed: "
+                f"{type(e).__name__}: {e}\n--- block ---\n{code}")

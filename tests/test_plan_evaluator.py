@@ -288,6 +288,112 @@ def test_grouped_dfs_exact_with_duplicate_items():
         assert nodes > 0
 
 
+# --- the 4-mode axis: per-slice remat (selective checkpointing) -------------
+
+def _random_remat(rng, g):
+    """Random explicit/inherit remat tuple (None = all inherit)."""
+    if rng.random() < 0.3:
+        return None
+    return tuple(rng.choice([True, False, None]) for _ in range(g))
+
+
+@pytest.mark.parametrize("model", MODELS)
+@pytest.mark.parametrize("env_name", sorted(ENVS))
+def test_evaluator_matches_plan_cost_with_remat_bits(model, env_name):
+    """4-mode plans (sharding x explicit remat per slice) must evaluate
+    identically through the table path and the direct op_cost walk."""
+    desc = describe(get_arch(model), get_shape("train_4k"))
+    env = ENVS[env_name]
+    modes = ("DP", "ZDP", "ZDP_POD") if env.mesh.multi_pod \
+        else ("DP", "ZDP")
+    rng = random.Random(hash((model, env_name, "remat")) & 0xFFFF)
+    for trial in range(5):
+        decs = {}
+        for op in desc.operators:
+            g = rng.choice([1, 2, 4]) if op.splittable else 1
+            decs[op.name] = Decision(
+                op.name, tuple(rng.choice(modes) for _ in range(g)),
+                _random_remat(rng, g))
+        for batch in (16, 256, 1024):
+            want = plan_cost(desc, decs, batch, env)
+            ev = PlanEvaluator.for_decisions(desc, env, decs)
+            got = ev.plan_cost(ev.modes_from_decisions(decs), batch)
+            _assert_cost_equal(got, want,
+                               f"{model}/{env_name}/b{batch}/remat")
+
+
+@pytest.mark.parametrize("model", MODELS)
+def test_remat_flip_deltas_match_full_evaluation(model):
+    """O(1) flips across all 9 extended columns (sharding x remat
+    state) must track the direct evaluation exactly."""
+    from repro.core.cost_model import N_EXT
+    desc = describe(get_arch(model), get_shape("train_4k"))
+    env = ENVS["multi_pod"]
+    rng = random.Random(23)
+    gran = {op.name: (4 if op.splittable else 1)
+            for op in desc.decidable()}
+    ev = PlanEvaluator(desc, env, gran)
+    ev.begin(np.zeros(ev.n_slices, dtype=np.int8), 256)
+    for step in range(300):
+        ev.flip(rng.randrange(ev.n_slices), rng.randrange(N_EXT))
+        if step % 25 == 0:
+            want = plan_cost(desc, ev.decisions(ev.current_modes), 256,
+                             env)
+            _assert_cost_equal(ev.result(), want, f"{model}/step{step}")
+    want = plan_cost(desc, ev.decisions(ev.current_modes), 256, env)
+    _assert_cost_equal(ev.result(), want, f"{model}/final")
+
+
+def test_extended_modes_round_trip():
+    from repro.core.cost_model import N_EXT
+    desc = describe(get_arch("phi4-mini-3.8b"), get_shape("train_4k"))
+    ev = PlanEvaluator(desc, ENVS["single_pod"],
+                       {op.name: (4 if op.splittable else 1)
+                        for op in desc.decidable()})
+    rng = random.Random(5)
+    m = np.array([rng.randrange(N_EXT) for _ in range(ev.n_slices)],
+                 dtype=np.int8)
+    assert (ev.modes_from_decisions(ev.decisions(m)) == m).all()
+
+
+@pytest.mark.parametrize("model", MODELS)
+@pytest.mark.parametrize("flag", [True, False])
+def test_forced_uniform_explicit_remat_matches_legacy_flag(model, flag):
+    """On stacked descriptions, a plan with explicit uniform remat bits
+    must cost exactly what the legacy global CostEnv.checkpointing flag
+    gives (the pre-PR Profiler), decision layout unchanged — the global
+    settings stay expressible inside the 4-mode axis."""
+    desc = describe(get_arch(model), get_shape("train_4k"))
+    env_legacy = CostEnv(DeviceInfo(), SINGLE_POD_MESH, checkpointing=flag)
+    rng = random.Random(hash((model, flag)) & 0xFFFF)
+    for trial in range(5):
+        legacy = _random_plan(desc, rng, ("DP", "ZDP"))
+        explicit = {name: Decision(name, d.modes,
+                                   (flag,) * len(d.modes))
+                    for name, d in legacy.items()}
+        for batch in (16, 256):
+            want = plan_cost(desc, legacy, batch, env_legacy)
+            # explicit bits are env-independent: evaluate them under
+            # the OPPOSITE env default to prove nothing leaks through
+            env_other = CostEnv(DeviceInfo(), SINGLE_POD_MESH,
+                                checkpointing=not flag)
+            got = plan_cost(desc, explicit, batch, env_other)
+            _assert_cost_equal(got, want, f"{model}/{flag}/b{batch}")
+
+
+@pytest.mark.parametrize("solver", ("dfs", "knapsack", "greedy"))
+def test_legacy_bool_configs_decisions_unchanged(solver):
+    """checkpointing=True/False searches must return remat-free
+    decisions (remat inherited from the env flag), exactly as pre-PR."""
+    desc = describe(get_arch("phi4-mini-3.8b"), get_shape("train_4k"))
+    for flag in (True, False):
+        env = CostEnv(DeviceInfo(), SINGLE_POD_MESH, checkpointing=flag)
+        res = search_plan(desc, 256, env, OSDPConfig(
+            search=solver, memory_limit_bytes=8 * 2**30,
+            checkpointing=flag))
+        assert all(d.remat is None for d in res.decisions.values())
+
+
 def test_solver_effort_is_reported():
     """nodes_visited: dfs = nodes expanded, knapsack = cells relaxed,
     greedy = items ranked — all populated for the bench JSON."""

@@ -18,16 +18,18 @@ from repro.sharding.specs import (WeightSpec, _merge_modes, build_param_set,
 # --- segment layout ----------------------------------------------------------
 
 def test_merge_modes_uniform_collapses():
-    assert _merge_modes([ZDP] * 4, 1024) == [(ZDP, 0, 1024)]
-    assert _merge_modes([DP] * 8, 512) == [(DP, 0, 512)]
+    # merged runs also carry the contributing plan-slice indices
+    assert _merge_modes([ZDP] * 4, 1024) == [(ZDP, 0, 1024, (0, 1, 2, 3))]
+    assert _merge_modes([DP] * 8, 512) == [(DP, 0, 512,
+                                            tuple(range(8)))]
 
 
 def test_merge_modes_mixed():
     segs = _merge_modes([ZDP, ZDP, DP, DP], 1024)
-    assert segs == [(ZDP, 0, 512), (DP, 512, 512)]
+    assert segs == [(ZDP, 0, 512, (0, 1)), (DP, 512, 512, (2, 3))]
     # boundaries snap to 128 where possible (MXU alignment)
     segs = _merge_modes([ZDP, DP, DP], 1152)
-    assert all(s % 128 == 0 for _, s, _ in segs)
+    assert all(s % 128 == 0 for _, s, _, _ in segs)
 
 
 def test_layout_single_segment_when_no_zdp_axis():
