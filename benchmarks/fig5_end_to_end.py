@@ -12,9 +12,14 @@ included) for four strategies:
 and report est. throughput (samples/s) + the OSDP/FSDP speedup the
 paper headlines (max 23%/92%/67% on N&D/W&S/2-server). Fig. 6 = the
 same on the two-server A100 environment.
+
+``--quick`` runs only the fig5 8-GiB block and asserts it against the
+golden rows pinned below (they also pin the depth-2 ClusterSpec
+adapter: any drift in flat-topology pricing fails CI here).
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
 from typing import Dict, List
 
@@ -90,23 +95,55 @@ def run_fig(device: DeviceInfo, mesh: MeshConfig, mem_gib: float,
     return rows
 
 
-def main(out=print) -> List[dict]:
+def _csv(r: dict) -> str:
+    return (f"{r['family']},{r['model']},{r['mem_gib']},"
+            f"{r['DP']:.0f},{r['FSDP']:.0f},{r['OSDP-base']:.0f},"
+            f"{r['OSDP']:.0f},{r['OSDP+hier']:.0f},"
+            f"{100 * r['osdp_vs_fsdp']:.1f}")
+
+
+# fig5 @ 8 GiB golden rows (pre-topology HEAD; pins the depth-2
+# ClusterSpec adapter byte-for-byte at print precision)
+GOLDEN_8GIB = [
+    "N&D,nd-48x1024,8,0,36034,37100,37100,37100,3.0",
+    "N&D,nd-64x1280,8,0,8915,9132,12983,12983,45.6",
+    "N&D,nd-96x1536,8,0,0,0,0,0,inf",
+    "W&S,ws-2x6144,8,0,31236,31485,35832,35832,14.7",
+    "W&S,ws-3x8192,8,0,0,0,4657,4657,inf",
+    "W&S,ws-4x12288,8,0,0,0,0,0,inf",
+    "I&C,ic-24,8,0,0,0,8779,8779,inf",
+    "I&C,ic-48,8,0,0,0,0,0,inf",
+    "I&C,ic-96,8,0,0,0,0,0,inf",
+]
+
+
+def main(out=print, quick: bool = False) -> List[dict]:
     out("fig,family,model,mem_gib,DP,FSDP,OSDP-base,OSDP,OSDP+hier,"
         "osdp_vs_fsdp_pct")
     all_rows = []
-    for fig, device, mesh, mems in (
-            ("fig5", RTX_TITAN_8, MESH_8GPU, (8, 16)),
-            ("fig6", A100_2SERVER, MESH_2SERVER, (16,))):
+    figs = ((("fig5", RTX_TITAN_8, MESH_8GPU, (8,)),) if quick else
+            (("fig5", RTX_TITAN_8, MESH_8GPU, (8, 16)),
+             ("fig6", A100_2SERVER, MESH_2SERVER, (16,))))
+    for fig, device, mesh, mems in figs:
         for mem in mems:
             for r in run_fig(device, mesh, mem):
-                out(f"{fig},{r['family']},{r['model']},{r['mem_gib']},"
-                    f"{r['DP']:.0f},{r['FSDP']:.0f},{r['OSDP-base']:.0f},"
-                    f"{r['OSDP']:.0f},{r['OSDP+hier']:.0f},"
-                    f"{100 * r['osdp_vs_fsdp']:.1f}")
+                out(f"{fig},{_csv(r)}")
                 r["fig"] = fig
                 all_rows.append(r)
+    if quick:
+        got = [_csv(r) for r in all_rows]
+        bad = [(g, w) for g, w in zip(got, GOLDEN_8GIB) if g != w]
+        if bad or len(got) != len(GOLDEN_8GIB):
+            lines = "\n".join(f"  got  {g}\n  want {w}" for g, w in bad)
+            raise SystemExit(
+                f"fig5 8-GiB golden rows drifted:\n{lines}")
+        out("# quick check passed: 8-GiB rows match the golden pins")
     return all_rows
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="8-GiB fig5 block only, asserted against the "
+                         "golden rows")
+    main(quick=ap.parse_args().quick)

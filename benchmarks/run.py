@@ -6,9 +6,12 @@
   fig8     OSDP with vs without splitting
   fig9     checkpointing interaction (OSDP vs FSDP under remat)
   search   search-engine timing (paper: 9–307 s)
+  topology flat vs hierarchical ClusterSpec planning (64–512 devices)
   roofline §Roofline table from dry-run records (if present)
 
-`python -m benchmarks.run [section ...]` — no args runs everything.
+`python -m benchmarks.run [section ...] [--device PRESET]` — no
+section args runs everything; `--device` forwards a DeviceInfo preset
+(tpu-v5e, tpu-v4, a100-80g, h100-sxm) to the sections that take one.
 """
 from __future__ import annotations
 
@@ -17,14 +20,23 @@ import time
 
 
 def main(argv=None) -> None:
-    args = (argv if argv is not None else sys.argv[1:]) or [
+    argv = list(argv if argv is not None else sys.argv[1:])
+    device = None
+    if "--device" in argv:
+        i = argv.index("--device")
+        if i + 1 >= len(argv):
+            raise SystemExit("--device needs a preset name "
+                             "(tpu-v5e, tpu-v4, a100-80g, h100-sxm)")
+        device = argv[i + 1]
+        del argv[i:i + 2]
+    args = argv or [
         "table1", "fig5", "hybrid3d", "fig7", "fig8", "fig9", "search",
-        "auto_g", "roofline"]
+        "topology", "auto_g", "roofline"]
     from benchmarks import (auto_granularity, fig5_end_to_end,
                             fig7_operator_splitting,
                             fig8_splitting_throughput, fig9_checkpointing,
                             hybrid_3d, roofline_report, search_time,
-                            table1_models)
+                            table1_models, topology_sweep)
     sections = {
         "table1": table1_models.main,
         "fig5": fig5_end_to_end.main,     # includes fig6
@@ -33,9 +45,11 @@ def main(argv=None) -> None:
         "fig8": fig8_splitting_throughput.main,
         "fig9": fig9_checkpointing.main,
         "search": search_time.main,
+        "topology": topology_sweep.main,
         "auto_g": auto_granularity.main,  # beyond-paper (§4.3 future work)
         "roofline": roofline_report.main,
     }
+    takes_device = {"search", "topology"}
     for name in args:
         fn = sections.get(name)
         if fn is None:
@@ -43,7 +57,10 @@ def main(argv=None) -> None:
             continue
         print(f"\n===== {name} =====")
         t0 = time.perf_counter()
-        fn()
+        if device and name in takes_device:
+            fn(device=device)
+        else:
+            fn()
         print(f"# [{name}] done in {time.perf_counter() - t0:.1f}s")
 
 

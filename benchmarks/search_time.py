@@ -60,7 +60,7 @@ def _gpt(name: str, layers: int, hidden: int) -> ModelConfig:
         tie_embeddings=True)
 
 
-def _search_plan_cases(quick: bool):
+def _search_plan_cases(quick: bool, device: Optional[DeviceInfo] = None):
     """(name, desc, env, memory_limit_bytes, global_batch, checkpointing)
     tuples.
 
@@ -82,15 +82,16 @@ def _search_plan_cases(quick: bool):
          CostEnv(RTX_TITAN_8, MESH_8GPU, checkpointing=False), 16 * 2**30,
          8, "selective"),
     ]
+    dev = device or DeviceInfo()
     if not quick:
         cases += [
             ("llama3-405b", describe(get_arch("llama3-405b"),
                                      get_shape("train_4k"), per_layer=True),
-             CostEnv(DeviceInfo(), SINGLE_POD_MESH), 240 * 2**30, 256,
+             CostEnv(dev, SINGLE_POD_MESH), 240 * 2**30, 256,
              True),
             ("arctic-480b", describe(get_arch("arctic-480b"),
                                      get_shape("train_4k"), per_layer=True),
-             CostEnv(DeviceInfo(), SINGLE_POD_MESH), 80 * 2**30, 256,
+             CostEnv(dev, SINGLE_POD_MESH), 80 * 2**30, 256,
              True),
         ]
     return cases
@@ -140,10 +141,12 @@ def _run_hybrid_case(name, desc, device, n_devices, lim, batch, out,
             "swept": len(plan.swept)}
 
 
-def _measure(quick: bool, out) -> Dict[str, dict]:
+def _measure(quick: bool, out,
+             device: Optional[DeviceInfo] = None) -> Dict[str, dict]:
     out("case,n_ops,solver,seconds,step_time_ms,feasible,work")
     results: Dict[str, dict] = {}
-    for name, desc, env, lim, batch, ckpt in _search_plan_cases(quick):
+    for name, desc, env, lim, batch, ckpt in _search_plan_cases(quick,
+                                                                device):
         results[name] = _run_search_plan_case(name, desc, env, lim, batch,
                                               ckpt, out)
     if quick:
@@ -160,7 +163,8 @@ def _measure(quick: bool, out) -> Dict[str, dict]:
         desc = describe(get_arch("arctic-480b"), get_shape("train_4k"),
                         per_layer=True)
         results["hybrid-64dev"] = _run_hybrid_case(
-            "hybrid-64dev", desc, DeviceInfo(), 64, 192 * 2**30, 64, out)
+            "hybrid-64dev", desc, device or DeviceInfo(), 64,
+            192 * 2**30, 64, out)
     return results
 
 
@@ -182,9 +186,11 @@ def _merge(path: Path, record: str, results: Dict[str, dict],
 
 
 def main(out=print, quick: bool = False, record: str = "current",
-         check: bool = False, json_path: Optional[Path] = None) -> dict:
+         check: bool = False, json_path: Optional[Path] = None,
+         device: Optional[str] = None) -> dict:
     path = Path(json_path) if json_path else JSON_PATH
-    results = _measure(quick, out)
+    results = _measure(quick, out,
+                       DeviceInfo.preset(device) if device else None)
     doc = _merge(path, record, results, quick)
     out(f"# wrote {path}")
     if doc.get("speedup"):
@@ -214,5 +220,9 @@ if __name__ == "__main__":
                     help="fail if any case exceeds its wall-clock ceiling")
     ap.add_argument("--json", type=Path, default=None,
                     help=f"output path (default {JSON_PATH})")
+    ap.add_argument("--device", default=None, metavar="PRESET",
+                    help="DeviceInfo preset for the large-model cases "
+                         "(tpu-v5e, tpu-v4, a100-80g, h100-sxm)")
     a = ap.parse_args()
-    main(quick=a.quick, record=a.record, check=a.check, json_path=a.json)
+    main(quick=a.quick, record=a.record, check=a.check, json_path=a.json,
+         device=a.device)

@@ -1,0 +1,303 @@
+"""Topology sweep — what the flat two-bandwidth device model costs.
+
+Sweeps 64–512 devices over TPU multi-pod, GPU NVLink/IB (2- and
+3-level), and mixed-memory topologies.  For each case two planners run
+on the SAME hardware:
+
+  flat  — the pre-topology model: the hierarchy collapsed to
+          (ici, dci) + a pod axis (`ClusterSpec.to_flat`), full-span
+          collectives priced at the bottleneck bandwidth, uniform
+          per-device memory (the worst device's), TP priced on ici
+          unconditionally (the legacy hybrid path);
+  topo  — the hierarchical `ClusterSpec`: per-level ring pricing,
+          level-k ZDP items, capacity-weighted heterogeneous sharding,
+          TP/PP placed innermost/outermost.
+
+Both plans are then re-scored under the *hierarchical* model (the
+ground truth this repo can state), so the rows answer: "what did
+planning against the flat model actually cost?"  Three failure classes
+show up:
+
+  * mispriced  — the flat model's bottleneck pricing picks a slower
+    sharding mix (e.g. avoids full-span ZDP that is actually cheap, or
+    picks a smaller batch);
+  * misplaced  — the flat hybrid path puts TP across a node boundary
+    (charged ici, pays IB) or cannot express rack-level ZDP@k;
+  * infeasible — uniform worst-device memory + even sharding rejects
+    fleets a capacity-weighted plan fits.
+
+Results land in ``BENCH_search.json`` under ``"topology"``.
+``--quick`` runs the CI subset; ``--check`` asserts the headline
+claims (>= 2 strict topology wins, >= 1 heterogeneous feasibility
+flip) and the wall-clock ceiling.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from repro.cluster.topology import (ClusterSpec, gpu_cluster,
+                                    mixed_memory_fleet, tpu_multipod)
+from repro.configs import DeviceInfo, MeshConfig, OSDPConfig, get_arch, \
+    get_shape
+from repro.core.cost_model import CostEnv, PlanEvaluator, ZDP_POD
+from repro.core.descriptions import ModelDescription, describe
+from repro.core.hybrid import hybrid_step_time
+from repro.core.search import schedule, search_hybrid, slice_description
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_search.json"
+CEILING_S = 120.0          # --check wall-clock ceiling (whole sweep)
+EPS = 1e-6                 # strict-win threshold
+
+
+def _translate_modes(decisions, true_spec: ClusterSpec):
+    """Map a flat planner's decisions onto the true spec's mode names:
+    the flat 'data' axis is the innermost level, so ZDP_POD means
+    'shard the innermost level only' = level-1 ZDP."""
+    if true_spec.depth <= 2:
+        return decisions
+    out = {}
+    for name, d in decisions.items():
+        modes = tuple(true_spec.span_mode(1) if m == ZDP_POD else m
+                      for m in d.modes)
+        out[name] = dataclasses.replace(d, modes=modes)
+    return out
+
+
+def _true_cost(desc: ModelDescription, decisions, batch: int,
+               spec: ClusterSpec, checkpointing: bool):
+    """Score a plan under the hierarchical ground-truth model."""
+    env = CostEnv(spec.device, cluster=spec, checkpointing=checkpointing)
+    decisions = _translate_modes(decisions, spec)
+    ev = PlanEvaluator.for_decisions(desc, env, decisions)
+    return ev.plan_cost(ev.modes_from_decisions(decisions), batch)
+
+
+# --- data-parallel (schedule) cases ------------------------------------------
+
+def _run_schedule_case(name: str, desc: ModelDescription,
+                       spec: ClusterSpec, limit_bytes: float,
+                       batches: List[int], checkpointing: bool = True,
+                       out=print) -> dict:
+    flat_dev, flat_mesh = spec.to_flat()
+    # the flat model cannot see per-group memory: it must assume every
+    # device is the worst one (the only safe uniform assumption)
+    flat_limit = min(limit_bytes, spec.min_hbm) if spec.groups \
+        else limit_bytes
+    flat_env = CostEnv(flat_dev, flat_mesh, checkpointing=checkpointing)
+    topo_env = CostEnv(spec.device, cluster=spec,
+                       checkpointing=checkpointing)
+    t0 = time.perf_counter()
+    flat = schedule(desc, flat_env, OSDPConfig(
+        memory_limit_bytes=flat_limit), batch_candidates=batches)
+    topo = schedule(desc, topo_env, OSDPConfig(
+        memory_limit_bytes=limit_bytes), batch_candidates=batches)
+    dt = time.perf_counter() - t0
+
+    # ground truth: both plans re-scored under the hierarchy.  The
+    # flat plan keeps its own batch choice; an infeasible flat search
+    # contributes zero throughput (it would refuse to run).
+    true_flat = _true_cost(desc, flat.decisions, flat.batch_size, spec,
+                           checkpointing)
+    true_topo = _true_cost(desc, topo.decisions, topo.batch_size, spec,
+                           checkpointing)
+    limit = spec.memory_limit(limit_bytes)
+    flat_ok = flat.feasible and true_flat.memory <= limit * (1 + 1e-9)
+    topo_ok = topo.feasible and true_topo.memory <= limit * (1 + 1e-9)
+    thr_flat = true_flat.throughput if flat_ok else 0.0
+    thr_topo = true_topo.throughput if topo_ok else 0.0
+    row = {
+        "kind": "schedule", "cluster": spec.summary(),
+        "model": desc.model.name, "n_devices": spec.n_devices,
+        "flat_feasible": bool(flat_ok), "topo_feasible": bool(topo_ok),
+        "flat_batch": flat.batch_size if flat_ok else 0,
+        "topo_batch": topo.batch_size if topo_ok else 0,
+        "flat_tok_s": round(thr_flat, 1), "topo_tok_s": round(thr_topo, 1),
+        "topo_win": bool(thr_topo > thr_flat * (1 + EPS)),
+        "feasibility_flip": bool(topo_ok and not flat_ok),
+        "seconds": round(dt, 3),
+    }
+    out(f"{name},{desc.model.name},{spec.n_devices},"
+        f"{thr_flat:.0f},{thr_topo:.0f},"
+        f"win={row['topo_win']},flip={row['feasibility_flip']}")
+    return row
+
+
+# --- hybrid (3D placement) cases ---------------------------------------------
+
+def _run_hybrid_case(name: str, desc: ModelDescription,
+                     spec: ClusterSpec, limit_bytes: float,
+                     batch: int, checkpointing: bool = True,
+                     out=print) -> dict:
+    flat_dev, _ = spec.to_flat()
+    # legacy hybrid path: no topology — TP priced on ici whatever it
+    # spans (DeviceInfo.devices_per_node withheld, as pre-PR)
+    flat_dev = dataclasses.replace(flat_dev, devices_per_node=0)
+    osdp = OSDPConfig(memory_limit_bytes=limit_bytes,
+                      checkpointing=checkpointing)
+    t0 = time.perf_counter()
+    flat = search_hybrid(desc, flat_dev, spec.n_devices, osdp,
+                         batch_candidates=[batch])
+    topo = search_hybrid(desc, spec.device, spec.n_devices, osdp,
+                         batch_candidates=[batch], cluster=spec)
+    dt = time.perf_counter() - t0
+
+    def true_throughput(plan) -> Tuple[float, Tuple[int, int, int]]:
+        f = plan.factorization
+        fac = (f.dp, f.tp, f.pp)
+        if not plan.feasible:
+            return 0.0, fac
+        try:
+            data_spec = spec.consume_inner(f.tp).consume_outer(f.pp)
+        except ValueError:
+            return 0.0, fac          # placement impossible on the fabric
+        sub = slice_description(desc, f.tp, f.pp)
+        inner = _true_cost(sub, plan.decisions, plan.batch_size,
+                           data_spec, checkpointing)
+        t = hybrid_step_time(inner.time, desc, spec.device,
+                             plan.batch_size, f, plan.micro, spec)
+        tokens = plan.batch_size * desc.shape.seq_len
+        return (tokens / t if t > 0 else 0.0), fac
+
+    thr_flat, fac_flat = true_throughput(flat)
+    thr_topo, fac_topo = true_throughput(topo)
+    row = {
+        "kind": "hybrid", "cluster": spec.summary(),
+        "model": desc.model.name, "n_devices": spec.n_devices,
+        "flat_factorization": list(fac_flat),
+        "topo_factorization": list(fac_topo),
+        "flat_tok_s": round(thr_flat, 1), "topo_tok_s": round(thr_topo, 1),
+        "topo_win": bool(thr_topo > thr_flat * (1 + EPS)),
+        "feasibility_flip": False,
+        "seconds": round(dt, 3),
+    }
+    out(f"{name},{desc.model.name},{spec.n_devices},"
+        f"{thr_flat:.0f},{thr_topo:.0f},"
+        f"flat_f={fac_flat},topo_f={fac_topo},win={row['topo_win']}")
+    return row
+
+
+# --- the sweep ---------------------------------------------------------------
+
+def _cases(quick: bool, device: Optional[str] = None):
+    """(name, runner) pairs; each runner returns a result row."""
+    dev = DeviceInfo.preset(device) if device else DeviceInfo()
+    a100 = DeviceInfo.preset("a100-80g")
+    h100 = DeviceInfo.preset("h100-sxm")
+    cases = []
+
+    # 4 TPU pods x 64 chips: flat bottleneck pricing vs per-level
+    # rings.  On this shallow, mildly-skewed hierarchy both planners
+    # land the same plan (an honest tie row: collapsing depth 2 to
+    # (ici, dci) loses pricing accuracy but not the argmin here)
+    spec_tpu = tpu_multipod(4, 64, dev)
+    cases.append(("tpu-4x64-llama405", lambda out: _run_schedule_case(
+        "tpu-4x64-llama405",
+        describe(get_arch("llama3-405b"), get_shape("train_4k")),
+        spec_tpu, 128 * 2**30, [256, 512], out=out)))
+
+    # 8 nodes x 8 H100 on a 3-level NVLink/IB/spine fabric: the flat
+    # model cannot express rack-level (ZDP@2) sharding at all
+    spec_spine = gpu_cluster(64, 8, device=h100, nvlink_bw=450e9,
+                             ib_bw=50e9, spine_nodes=8, spine_bw=12.5e9)
+    cases.append(("gpu-512-arctic", lambda out: _run_schedule_case(
+        "gpu-512-arctic",
+        describe(get_arch("arctic-480b"), get_shape("train_4k")),
+        spec_spine, 72 * 2**30, [512, 1024], out=out)))
+
+    # 2 A100 servers: the legacy hybrid TP-pricing bug (tp across IB
+    # charged at NVLink rate)
+    spec_2srv = ClusterSpec.from_device(
+        dataclasses.replace(a100, dci_bw=12.5e9), 16)
+    cases.append(("a100-2x8-hybrid", lambda out: _run_hybrid_case(
+        "a100-2x8-hybrid",
+        describe(get_arch("phi4-mini-3.8b"), get_shape("train_4k")),
+        spec_2srv, 24 * 2**30, 32, out=out)))
+
+    # mixed-generation fleet: 128 x 24 GiB + 128 x 80 GiB — uniform
+    # worst-device planning rejects it, capacity-weighted fits it
+    spec_mixed = mixed_memory_fleet(128, 24, 128, 80, pod_size=64,
+                                    device=dev)
+    cases.append(("mixed-24-80-arctic", lambda out: _run_schedule_case(
+        "mixed-24-80-arctic",
+        describe(get_arch("arctic-480b"), get_shape("train_4k")),
+        spec_mixed, spec_mixed.min_hbm, [256], out=out)))
+
+    if not quick:
+        # 8 nodes x 8 A100, nodes paired under oversubscribed leaf
+        # switches (depth 3): rack-level ZDP@2 is inexpressible in the
+        # flat model
+        spec_ib = gpu_cluster(8, 8, device=a100, nvlink_bw=300e9,
+                              ib_bw=25e9, spine_nodes=2, spine_bw=6e9)
+        cases.append(("gpu-8x8-dbrx", lambda out: _run_schedule_case(
+            "gpu-8x8-dbrx",
+            describe(get_arch("dbrx-132b"), get_shape("train_4k")),
+            spec_ib, 44 * 2**30, [64, 128, 256], out=out)))
+
+        # 64 H100 hybrid on NVLink/IB: TP must stay inside the node
+        spec_h100 = gpu_cluster(8, 8, device=h100, nvlink_bw=450e9,
+                                ib_bw=50e9)
+        cases.append(("h100-8x8-hybrid", lambda out: _run_hybrid_case(
+            "h100-8x8-hybrid",
+            describe(get_arch("dbrx-132b"), get_shape("train_4k")),
+            spec_h100, 76 * 2**30, 128, out=out)))
+    return cases
+
+
+def main(out=print, quick: bool = False, check: bool = False,
+         json_path: Optional[Path] = None,
+         device: Optional[str] = None) -> dict:
+    path = Path(json_path) if json_path else JSON_PATH
+    out("case,model,n_devices,flat_tok_s,topo_tok_s,notes")
+    t0 = time.perf_counter()
+    rows: Dict[str, dict] = {}
+    for name, runner in _cases(quick, device):
+        rows[name] = runner(out)
+    elapsed = time.perf_counter() - t0
+
+    wins = sum(1 for r in rows.values() if r["topo_win"])
+    flips = sum(1 for r in rows.values() if r["feasibility_flip"])
+    out(f"# {len(rows)} cases, {wins} topology wins, {flips} "
+        f"feasibility flips, {elapsed:.1f}s")
+
+    doc = {"schema": 1}
+    if path.exists():
+        doc = json.loads(path.read_text())
+    doc["topology"] = {"rows": rows, "wins": wins,
+                       "feasibility_flips": flips,
+                       "quick": quick,
+                       "seconds": round(elapsed, 3)}
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    out(f"# wrote {path}")
+
+    if check:
+        if wins < 2:
+            raise SystemExit(
+                f"topology-aware planning won only {wins} cases (< 2)")
+        if flips < 1:
+            raise SystemExit("no heterogeneous feasibility flip")
+        if elapsed > CEILING_S:
+            raise SystemExit(
+                f"sweep took {elapsed:.1f}s (ceiling {CEILING_S:.0f}s)")
+        out("# check passed: >= 2 wins, >= 1 flip, within ceiling")
+    return doc
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI subset (4 cases, stacked descriptions)")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the headline claims and the ceiling")
+    ap.add_argument("--json", type=Path, default=None,
+                    help=f"output path (default {JSON_PATH})")
+    ap.add_argument("--device", default=None, metavar="PRESET",
+                    help="base DeviceInfo preset for the TPU / "
+                         "mixed-memory fleets (tpu-v5e, tpu-v4, "
+                         "a100-80g, h100-sxm)")
+    a = ap.parse_args()
+    main(quick=a.quick, check=a.check, json_path=a.json, device=a.device)

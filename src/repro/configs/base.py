@@ -247,7 +247,11 @@ MULTI_POD_MESH = MeshConfig((2, 16, 16), ("pod", "data", "model"))
 class DeviceInfo:
     """The paper's "device information" DI — profiled hardware constants.
 
-    Defaults are the assignment's TPU v5e targets.
+    Defaults are the assignment's TPU v5e targets.  This is the *flat*
+    device model (one fast + one slow bandwidth); real hierarchies
+    (chip -> node -> pod -> cluster, heterogeneous memory) are
+    described by `repro.cluster.topology.ClusterSpec`, whose depth-2
+    degenerate case reproduces this model exactly.
     """
 
     name: str = "tpu-v5e"
@@ -260,9 +264,46 @@ class DeviceInfo:
     # gamma: seconds of compute per (FLOP / peak) — 1.0 means roofline;
     # real kernels run below peak, so the cost model uses this efficiency.
     mxu_efficiency: float = 0.55
+    # devices sharing the fast (ici_bw) domain — lets topology-aware
+    # code infer a node boundary from a flat DeviceInfo (0 = unknown:
+    # the whole extent is assumed to sit on ici_bw, the legacy model)
+    devices_per_node: int = 0
 
     def link_bw(self, axis: str) -> float:
         return self.dci_bw if axis == "pod" else self.ici_bw
+
+    @classmethod
+    def preset(cls, name: str) -> "DeviceInfo":
+        """Catalog of profiled hardware targets (`--device` on the
+        launchers and benchmark CLIs)."""
+        try:
+            return cls(name=name, **_DEVICE_PRESETS[name])
+        except KeyError:
+            raise KeyError(
+                f"unknown device preset {name!r}; "
+                f"known: {sorted(_DEVICE_PRESETS)}") from None
+
+
+# peak_flops are bf16 dense; mxu_efficiency is the sustained fraction
+# the cost model's gamma term uses (per-family empirical deratings)
+_DEVICE_PRESETS = {
+    "tpu-v5e": dict(
+        peak_flops=197e12, hbm_bytes=16 * 2**30, hbm_bw=819e9,
+        ici_bw=50e9, dci_bw=25e9, alpha=1e-6, mxu_efficiency=0.55),
+    "tpu-v4": dict(
+        peak_flops=275e12, hbm_bytes=32 * 2**30, hbm_bw=1228e9,
+        ici_bw=100e9, dci_bw=25e9, alpha=1e-6, mxu_efficiency=0.55),
+    "a100-80g": dict(
+        peak_flops=312e12, hbm_bytes=80 * 2**30, hbm_bw=2039e9,
+        ici_bw=300e9, dci_bw=25e9, alpha=5e-6, mxu_efficiency=0.45,
+        devices_per_node=8),
+    "h100-sxm": dict(
+        peak_flops=989e12, hbm_bytes=80 * 2**30, hbm_bw=3350e9,
+        ici_bw=450e9, dci_bw=50e9, alpha=5e-6, mxu_efficiency=0.45,
+        devices_per_node=8),
+}
+
+DEVICE_PRESETS = tuple(sorted(_DEVICE_PRESETS))
 
 
 # OSDPConfig.checkpointing value that promotes remat from a global

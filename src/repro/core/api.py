@@ -14,6 +14,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional, Sequence, Union
 
+from repro.cluster.topology import ClusterSpec
 from repro.configs.base import (DeviceInfo, MeshConfig, ModelConfig,
                                 OSDPConfig, RunConfig, ShapeConfig,
                                 SINGLE_POD_MESH)
@@ -27,7 +28,7 @@ from repro.core import search as _search
 
 def osdp(model: ModelConfig,
          shape: ShapeConfig,
-         mesh: MeshConfig = SINGLE_POD_MESH,
+         mesh: Optional[MeshConfig] = None,
          *,
          memory_limit_gib: float = 16.0,
          device: Optional[DeviceInfo] = None,
@@ -35,7 +36,8 @@ def osdp(model: ModelConfig,
          operator_splitting: bool = True,
          slice_granularity: int = 4,
          checkpointing: Union[bool, str] = True,
-         force_mode: Optional[str] = None) -> Plan:
+         force_mode: Optional[str] = None,
+         cluster: Optional["ClusterSpec"] = None) -> Plan:
     """Search the optimal sharded-data-parallel plan (paper Alg. 1).
 
     `checkpointing` accepts the legacy global flags True / False, or
@@ -43,7 +45,17 @@ def osdp(model: ModelConfig,
     (the 4-mode axis: DP/ZDP x remat/no-remat) — the returned plan's
     `Decision.remat` then carries the per-slice bits and compiles to a
     matching `jax.checkpoint` policy via `models.registry.build_model`.
+
+    `cluster` (a `repro.cluster.ClusterSpec`) makes the search
+    topology-aware: collectives are priced with hierarchical rings,
+    the sharding axis widens to level-k ZDP, and heterogeneous device
+    groups bound feasibility at the worst group.  Without one, the
+    flat (device, mesh) model applies (mesh defaults to
+    SINGLE_POD_MESH).
     """
+    if mesh is None:
+        mesh = (cluster.mesh_config() if cluster is not None
+                else SINGLE_POD_MESH)
     cfg = OSDPConfig(
         enabled=True,
         memory_limit_bytes=memory_limit_gib * 2**30,
@@ -54,13 +66,13 @@ def osdp(model: ModelConfig,
         force_mode=force_mode,
     )
     run = RunConfig(model=model, shape=shape, mesh=mesh, osdp=cfg)
-    return make_plan(run, device)
+    return make_plan(run, device, cluster=cluster)
 
 
 def search_hybrid(model: Union[ModelConfig, ModelDescription],
                   shape: Optional[ShapeConfig] = None,
                   *,
-                  n_devices: int,
+                  n_devices: Optional[int] = None,
                   memory_limit_gib: float = 16.0,
                   device: Optional[DeviceInfo] = None,
                   search: str = "dfs",
@@ -73,6 +85,7 @@ def search_hybrid(model: Union[ModelConfig, ModelDescription],
                   max_pp: int = 0,
                   batch_candidates: Optional[Sequence[int]] = None,
                   candidates: Optional[Sequence[Factorization]] = None,
+                  cluster: Optional[ClusterSpec] = None,
                   ) -> HybridPlan:
     """Search the hybrid 3D(+OSDP) plan space (paper Fig. 5/6 rows).
 
@@ -86,6 +99,11 @@ def search_hybrid(model: Union[ModelConfig, ModelDescription],
     `model` may be a ModelConfig (paired with `shape`) or a prebuilt
     ModelDescription (e.g. the per-layer inconsistent models of the
     paper's I&C family).
+
+    With a `cluster`, placement is topology-aware: TP on the
+    innermost levels, PP across the outermost, the DP residue searched
+    over the remaining hierarchy (level-k ZDP enabled); `n_devices`
+    defaults to the cluster size.
     """
     if isinstance(model, ModelDescription):
         desc = model
@@ -93,31 +111,39 @@ def search_hybrid(model: Union[ModelConfig, ModelDescription],
         if shape is None:
             raise TypeError("shape is required when model is a ModelConfig")
         desc = describe(model, shape)
+    if n_devices is None:
+        if cluster is None:
+            raise TypeError("n_devices is required without a cluster")
+        n_devices = cluster.n_devices
     cfg = OSDPConfig(
         enabled=True,
         memory_limit_bytes=memory_limit_gib * 2**30,
         search=search,
         operator_splitting=operator_splitting,
         default_slice_granularity=slice_granularity,
-        allow_pod_hierarchical=False,
+        allow_pod_hierarchical=cluster is not None,
         checkpointing=checkpointing,
         force_mode=force_mode,
     )
+    dev = device or (cluster.device if cluster is not None
+                     else DeviceInfo())
     return _search.search_hybrid(
-        desc, device or DeviceInfo(), n_devices, cfg,
+        desc, dev, n_devices, cfg,
         batch_candidates=batch_candidates, micro=micro,
-        candidates=candidates, max_tp=max_tp, max_pp=max_pp)
+        candidates=candidates, max_tp=max_tp, max_pp=max_pp,
+        cluster=cluster)
 
 
 def evaluate_plan(model: Union[ModelConfig, ModelDescription],
                   decisions: Dict[str, Decision],
                   shape: Optional[ShapeConfig] = None,
-                  mesh: MeshConfig = SINGLE_POD_MESH,
+                  mesh: Optional[MeshConfig] = SINGLE_POD_MESH,
                   *,
                   global_batch: Optional[int] = None,
                   device: Optional[DeviceInfo] = None,
                   checkpointing: bool = True,
-                  train: bool = True) -> PlanCost:
+                  train: bool = True,
+                  cluster: Optional[ClusterSpec] = None) -> PlanCost:
     """Score an explicit plan through the vectorized PlanEvaluator.
 
     Same result as `cost_model.plan_cost` (to float-summation order),
@@ -137,8 +163,12 @@ def evaluate_plan(model: Union[ModelConfig, ModelDescription],
         if shape is None:
             raise TypeError("shape is required when model is a ModelConfig")
         desc = describe(model, shape)
-    env = CostEnv(device or DeviceInfo(), mesh,
-                  checkpointing=checkpointing, train=train)
+    if cluster is not None and mesh is SINGLE_POD_MESH:
+        mesh = None          # derive the mesh from the cluster spec
+    env = CostEnv(device or (cluster.device if cluster is not None
+                             else DeviceInfo()), mesh,
+                  checkpointing=checkpointing, train=train,
+                  cluster=cluster)
     ev = PlanEvaluator.for_decisions(desc, env, decisions)
     modes = ev.modes_from_decisions(decisions)
     return ev.plan_cost(modes, global_batch or desc.shape.global_batch)

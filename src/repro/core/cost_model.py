@@ -32,19 +32,29 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
+from functools import cached_property
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.configs.base import DeviceInfo, MeshConfig
+from repro.cluster.topology import ClusterSpec
 from repro.core.descriptions import (ACT_BYTES, BYTES_PER_PARAM,
                                      ModelDescription, OperatorDesc,
                                      STATE_BYTES_PER_PARAM)
 
 # parallel modes -------------------------------------------------------------
+#
+# Sharding generalizes to "ZDP at level k" of a hierarchical
+# `ClusterSpec` (see repro.cluster.topology): shard model states across
+# the innermost k levels, gather over that span with a hierarchical
+# ring, all-reduce grads across the rest.  The legacy triple below is
+# the depth-2 case (ZDP = full span, ZDP_POD = level 1); deeper specs
+# add "ZDP@k" modes.  The authoritative per-env mode list is
+# `CostEnv.topo.mode_names`.
 DP = "DP"
 ZDP = "ZDP"
-ZDP_POD = "ZDP_POD"      # beyond-paper hierarchical mode
+ZDP_POD = "ZDP_POD"      # beyond-paper hierarchical mode (level 1 of 2)
 MODES = (DP, ZDP, ZDP_POD)
 
 # per-slice remat states (the second axis of the 4-mode decision space)
@@ -110,41 +120,65 @@ class Decision:
 
 @dataclass(frozen=True)
 class CostEnv:
-    """Everything the Profiler needs besides the plan."""
+    """Everything the Profiler needs besides the plan.
+
+    `cluster` is the hierarchical device information for the
+    data-parallel extent; when absent it is derived from the flat
+    (device, mesh) pair via the depth-2 adapter
+    `ClusterSpec.from_flat` — on single-pod meshes every price then
+    collapses to the legacy flat-ring formulas exactly.  When a
+    `cluster` is given, `mesh` may be None (derived from the spec).
+    """
 
     device: DeviceInfo
-    mesh: MeshConfig
+    mesh: Optional[MeshConfig] = None
     checkpointing: bool = True
     # TP already divides each operator's params across the model axis;
     # OSDP decides the data-axis story for the per-TP-shard residue.
     include_tp: bool = True
     # training = fwd + bwd (2x fwd) compute; False for serving estimates
     train: bool = True
+    cluster: Optional[ClusterSpec] = None
+
+    def __post_init__(self):
+        if self.mesh is None:
+            if self.cluster is None:
+                raise ValueError("CostEnv needs a mesh or a cluster")
+            object.__setattr__(self, "mesh",
+                               self.cluster.mesh_config())
+
+    @cached_property
+    def topo(self) -> ClusterSpec:
+        """The hierarchical cluster spec all collectives are priced
+        against (the explicit `cluster`, else the depth-2 adapter)."""
+        if self.cluster is not None:
+            return self.cluster
+        return ClusterSpec.from_flat(self.device, self.mesh)
 
     @property
     def n_data(self) -> int:
-        return self.mesh.data_parallel          # pod x data ways
+        return self.topo.n_devices              # full data extent
 
     @property
     def n_data_local(self) -> int:
-        for s, a in zip(self.mesh.shape, self.mesh.axes):
-            if a == "data":
-                return s
-        return 1
+        return self.topo.span_ways(1)           # innermost level
 
     @property
     def n_tp(self) -> int:
         return self.mesh.model_parallel if self.include_tp else 1
 
+    @property
+    def peak_compute(self) -> float:
+        """FLOP/s the step can sustain: the slowest device group's
+        peak (uniform clusters: the device's), derated by efficiency."""
+        return self.topo.effective_peak_flops * self.device.mxu_efficiency
 
-def shard_ways(mode: str, env: CostEnv) -> int:
-    if mode == DP:
-        return 1
-    if mode == ZDP:
-        return env.n_data
-    if mode == ZDP_POD:
-        return env.n_data_local
-    raise ValueError(mode)
+
+def shard_ways(mode: str, env: CostEnv) -> float:
+    """State divisor of a sharding mode (1 for DP; the spanned device
+    count for level-k ZDP; capacity-weighted for full-span ZDP on a
+    heterogeneous cluster)."""
+    return env.topo.shard_ways(mode)
 
 
 def _ring_time(bytes_total: float, n: int, alpha: float, bw: float) -> float:
@@ -152,6 +186,19 @@ def _ring_time(bytes_total: float, n: int, alpha: float, bw: float) -> float:
     if n <= 1:
         return 0.0
     return (n - 1) * (alpha + bytes_total / n / bw)
+
+
+def _rings_pass(nbytes: float, rings, n_span: int,
+                alpha_scale: float = 1.0) -> float:
+    """One hierarchical ring pass over a span: the sum of per-level
+    `_ring_time`-shaped terms from `ClusterSpec.span_rings` (kept in
+    the exact floating-point shape of the legacy flat formula, so a
+    single-ring span prices bit-identically to `_ring_time`)."""
+    t = 0.0
+    for w, alpha, bw, prefix in rings:
+        b = nbytes if prefix == 1 else nbytes * prefix
+        t += (w - 1) * (alpha * alpha_scale + b / n_span / bw)
+    return t
 
 
 @dataclass
@@ -173,7 +220,7 @@ def op_cost(op: OperatorDesc, decision: Decision, batch_per_device: int,
         return _op_cost_per_slice(op, decision, batch_per_device, seq_len,
                                   env)
     g = decision.split
-    dev = env.device
+    topo = env.topo
     tp = env.n_tp
     # per-TP-shard sizes; OSDP reasons about the per-device residue
     # training holds optimizer states; serving only the bf16 weights
@@ -186,8 +233,7 @@ def op_cost(op: OperatorDesc, decision: Decision, batch_per_device: int,
         # working set is live (the layer-boundary checkpoints are counted
         # once in ModelDescription.resident_act_bytes_per_token)
         act /= max(1, op.layers)
-    compute = (op.flops_per_token * tokens / tp
-               / (dev.peak_flops * dev.mxu_efficiency))
+    compute = op.flops_per_token * tokens / tp / env.peak_compute
     if env.train:
         compute *= 3.0            # fwd + bwd (2x fwd)
     if env.checkpointing:
@@ -204,19 +250,21 @@ def op_cost(op: OperatorDesc, decision: Decision, batch_per_device: int,
         else:
             runs.append((mode, 1))
 
+    full_rings = topo.gather_rings(topo.depth)
+    n_full = topo.span_ways(topo.depth)
     mem = 0.0
     peak = 0.0
     comm = 0.0
     for mode, run_len in runs:
         s_bytes = state_bytes * run_len / g
         p_bytes = param_bytes * run_len / g
-        n = shard_ways(mode, env)
-        mem += s_bytes / n
-        if mode == DP:
-            # grads all-reduced over the full data extent (training only)
+        k = topo.mode_span(mode)
+        mem += s_bytes / topo.shard_ways(mode)
+        if k == 0:               # DP
+            # grads all-reduced over the full data extent (training
+            # only): one hierarchical ring per reduce/gather pass
             if env.train:
-                comm += 2 * _ring_time(p_bytes, env.n_data, dev.alpha,
-                                       dev.link_bw("data"))
+                comm += 2 * _rings_pass(p_bytes, full_rings, n_full)
         else:
             if env.train:
                 rounds = 3 + (1 if env.checkpointing else 0)
@@ -225,21 +273,15 @@ def op_cost(op: OperatorDesc, decision: Decision, batch_per_device: int,
             # splitting processes the run's slices sequentially: one
             # collective per slice -> alpha charged run_len times, beta
             # on the total bytes (matches chunked execution).
-            alpha_eff = dev.alpha * run_len
-            if mode == ZDP:
-                # flat all-gather over pod x data; bottleneck link is the
-                # slowest axis crossed
-                bw = min(dev.link_bw(a) for a in env.mesh.axes
-                         if a in ("pod", "data"))
-                comm += rounds * _ring_time(p_bytes, env.n_data, alpha_eff,
-                                            bw)
-            else:  # ZDP_POD: gather within pod over ICI; grads still
-                # all-reduced across pods (DP over the pod axis)
-                comm += rounds * _ring_time(p_bytes, env.n_data_local,
-                                            alpha_eff, dev.link_bw("data"))
-                n_pods = env.n_data // env.n_data_local
-                comm += 2 * _ring_time(p_bytes / env.n_data_local, n_pods,
-                                       dev.alpha, dev.link_bw("pod"))
+            n_k = topo.span_ways(k)
+            comm += rounds * _rings_pass(p_bytes, topo.gather_rings(k),
+                                         n_k, run_len)
+            if k < topo.depth:
+                # grads of the level-k shard all-reduced across the
+                # outer (replicated) extent
+                comm += 2 * _rings_pass(p_bytes / n_k,
+                                        topo.outer_rings(k),
+                                        n_full // n_k)
             # M_extra (paper §3.1/§3.3): the gathered slice is transient
             # but counted additively per op, at the granularity actually
             # gathered — one layer's slice (scan gathers per layer).
@@ -266,14 +308,13 @@ def _op_cost_per_slice(op: OperatorDesc, decision: Decision,
       * inherit   — the legacy CostEnv.checkpointing scaling.
     """
     g = decision.split
-    dev = env.device
+    topo = env.topo
     tp = env.n_tp
     state_bytes = (op.state_bytes if env.train else op.param_bytes) / tp
     param_bytes = op.param_bytes / tp
     tokens = batch_per_device * seq_len
     act_slice = op.act_bytes_per_token / tp * tokens / g
-    comp_slice = (op.flops_per_token * tokens / tp
-                  / (dev.peak_flops * dev.mxu_efficiency)) / g
+    comp_slice = (op.flops_per_token * tokens / tp / env.peak_compute) / g
     if env.train:
         comp_slice *= 3.0
     rl = op.eff_remat_layers
@@ -305,15 +346,15 @@ def _op_cost_per_slice(op: OperatorDesc, decision: Decision,
         run_len = len(idxs)
         s_bytes = state_bytes * run_len / g
         p_bytes = param_bytes * run_len / g
-        n = shard_ways(mode, env)
-        mem += s_bytes / n
-        if mode == DP:
+        k = topo.mode_span(mode)
+        mem += s_bytes / topo.shard_ways(mode)
+        if k == 0:               # DP
             if env.train:
-                comm += 2 * _ring_time(p_bytes, env.n_data, dev.alpha,
-                                       dev.link_bw("data"))
+                comm += 2 * _rings_pass(p_bytes,
+                                        topo.gather_rings(topo.depth),
+                                        topo.span_ways(topo.depth))
             continue
         base_rounds = 3 if env.train else 1
-        alpha_eff = dev.alpha * run_len
         # maximal remat sub-runs within the sharding run: the §4.3
         # recompute gather re-fetches exactly the remat'd slices
         subs: List[int] = []
@@ -327,25 +368,14 @@ def _op_cost_per_slice(op: OperatorDesc, decision: Decision,
                 cur = 0
         if cur:
             subs.append(cur)
-        if mode == ZDP:
-            bw = min(dev.link_bw(a) for a in env.mesh.axes
-                     if a in ("pod", "data"))
-            comm += base_rounds * _ring_time(p_bytes, env.n_data,
-                                             alpha_eff, bw)
-            for sl in subs:
-                comm += _ring_time(param_bytes * sl / g, env.n_data,
-                                   dev.alpha * sl, bw)
-        else:  # ZDP_POD: gather on ICI, cross-pod grad all-reduce
-            comm += base_rounds * _ring_time(p_bytes, env.n_data_local,
-                                             alpha_eff,
-                                             dev.link_bw("data"))
-            for sl in subs:
-                comm += _ring_time(param_bytes * sl / g,
-                                   env.n_data_local, dev.alpha * sl,
-                                   dev.link_bw("data"))
-            n_pods = env.n_data // env.n_data_local
-            comm += 2 * _ring_time(p_bytes / env.n_data_local, n_pods,
-                                   dev.alpha, dev.link_bw("pod"))
+        n_k = topo.span_ways(k)
+        grings = topo.gather_rings(k)
+        comm += base_rounds * _rings_pass(p_bytes, grings, n_k, run_len)
+        for sl in subs:
+            comm += _rings_pass(param_bytes * sl / g, grings, n_k, sl)
+        if k < topo.depth:       # cross-outer grad all-reduce
+            comm += 2 * _rings_pass(p_bytes / n_k, topo.outer_rings(k),
+                                    topo.span_ways(topo.depth) // n_k)
         gathered = param_bytes / (max(1, op.layers) * g)
         mem += gathered
         peak = max(peak, gathered)
@@ -438,23 +468,23 @@ class PlanEvaluator:
         self.desc = desc
         self.env = env
         gran = granularity or {}
-        dev = env.device
+        topo = env.topo
         tp = env.n_tp
         seq = desc.shape.seq_len
-        n_d = env.n_data
-        n_l = env.n_data_local
-        n_pods = n_d // max(1, n_l)
-        n_m = len(MODES)
+        # dynamic sharding-mode list: DP, full ZDP, then one column per
+        # intermediate hierarchy level (depth-2 specs keep the legacy
+        # (DP, ZDP, ZDP_POD) layout -> N_EXT == 9, byte-compatible)
+        self.modes: Tuple[str, ...] = topo.mode_names
+        self.n_modes = len(self.modes)
+        self.n_ext = self.n_modes * N_REMAT_STATES
+        self.mode_index = {m: i for i, m in enumerate(self.modes)}
+        n_m = self.n_modes
         # ZDP gather rounds per remat state: inherit follows the env
         # flag; explicit off/on pin 3 / 4 (§4.3); serving gathers once
         if env.train:
             rounds = (3 + (1 if env.checkpointing else 0), 3, 4)
         else:
             rounds = (1, 1, 1)
-        bw_data = dev.link_bw("data")
-        bw_pod = dev.link_bw("pod")
-        bw_zdp = min(dev.link_bw(a) for a in env.mesh.axes
-                     if a in ("pod", "data"))
 
         ops = desc.operators
         self.n_ops = len(ops)
@@ -487,7 +517,7 @@ class PlanEvaluator:
              act,                                          # explicit off
              act / remat_layers], axis=1)                  # explicit on
         comp = np.array([op.flops_per_token for op in ops]) * seq / tp \
-            / (dev.peak_flops * dev.mxu_efficiency) / g
+            / env.peak_compute / g
         if env.train:
             comp = comp * 3.0
         comp_states = np.stack(
@@ -495,46 +525,56 @@ class PlanEvaluator:
              comp,
              comp * 1.30], axis=1)
 
-        # per-op per-extended-mode tables; e = mode + 3 * remat state
+        # per-op per-extended-mode tables; e = mode + n_modes * state.
+        # Collective prices iterate the spec's per-level rings in the
+        # exact floating-point shape of the legacy flat formula
+        # (bit-identical on depth-2 single-pod adapters).
         mem_op = np.zeros((self.n_ops, n_m))
-        comm_op = np.zeros((self.n_ops, N_EXT))          # per-slice additive
+        comm_op = np.zeros((self.n_ops, self.n_ext))     # per-slice additive
         self.mem_run = np.zeros((self.n_ops, n_m))
         self.comm_run = np.zeros((self.n_ops, n_m))
         sliced = param_b / g                              # per-slice bytes
-        # DP: states replicated; grads all-reduced over the full data
-        # extent (training only): alpha once per run, beta per slice;
-        # remat does not change DP collectives
+        n_full = topo.span_ways(topo.depth)
+        # DP: states replicated; grads all-reduced hierarchically over
+        # the full data extent (training only): alpha once per run,
+        # beta per slice; remat does not change DP collectives
         mem_op[:, 0] = state_b / g
-        if env.train and n_d > 1:
-            dp_beta = 2 * (n_d - 1) * (sliced / n_d / bw_data)
-            for st in range(N_REMAT_STATES):
-                comm_op[:, 0 + n_m * st] = dp_beta
-            self.comm_run[:, 0] = 2 * (n_d - 1) * dev.alpha
-        # ZDP: flat gather over pod x data; alpha scales with run length
-        # (chunked execution), so it is fully per-slice — including the
-        # remat-state-dependent 4th gather
-        mem_op[:, 1] = state_b / g / n_d
-        if n_d > 1:
-            for st in range(N_REMAT_STATES):
-                comm_op[:, 1 + n_m * st] = rounds[st] * (n_d - 1) * (
-                    dev.alpha + sliced / n_d / bw_zdp)
-        self.mem_run[:, 1] = self.gathered
-        # ZDP_POD: in-pod gather on ICI + cross-pod grad all-reduce
-        # (the cross-pod grad terms are remat-independent)
-        mem_op[:, 2] = state_b / g / max(1, n_l)
-        if n_l > 1:
-            for st in range(N_REMAT_STATES):
-                comm_op[:, 2 + n_m * st] = rounds[st] * (n_l - 1) * (
-                    dev.alpha + sliced / n_l / bw_data)
-        if n_pods > 1:
-            xpod = 2 * (n_pods - 1) * ((sliced / n_l) / n_pods / bw_pod)
-            for st in range(N_REMAT_STATES):
-                comm_op[:, 2 + n_m * st] += xpod
-            self.comm_run[:, 2] = 2 * (n_pods - 1) * dev.alpha
-        self.mem_run[:, 2] = self.gathered
-        # tile/repeat op tables into (n_slices, 9): state-independent
-        # mem cycles over modes; act/comp repeat each state 3x so that
-        # column e = mode + 3*state lands on the right entry
+        if env.train:
+            for w, alpha, bw, prefix in topo.gather_rings(topo.depth):
+                b = sliced if prefix == 1 else sliced * prefix
+                dp_beta = 2 * (w - 1) * (b / n_full / bw)
+                for st in range(N_REMAT_STATES):
+                    comm_op[:, 0 + n_m * st] += dp_beta
+                self.comm_run[:, 0] += 2 * (w - 1) * alpha
+        # level-k ZDP columns (ZDP = full span): hierarchical gather
+        # over the innermost k levels — alpha scales with run length
+        # (chunked execution), so it is fully per-slice, including the
+        # remat-state-dependent 4th gather; the cross-outer grad
+        # all-reduce is remat-independent (beta per slice, alpha once
+        # per run)
+        for mi in range(1, n_m):
+            mode = self.modes[mi]
+            k = topo.mode_span(mode)
+            n_k = topo.span_ways(k)
+            mem_op[:, mi] = state_b / g / topo.shard_ways(mode)
+            for w, alpha, bw, prefix in topo.gather_rings(k):
+                b = sliced if prefix == 1 else sliced * prefix
+                for st in range(N_REMAT_STATES):
+                    comm_op[:, mi + n_m * st] += rounds[st] * (w - 1) * (
+                        alpha + b / n_k / bw)
+            if k < topo.depth:
+                shard = sliced / n_k
+                n_outer = n_full // n_k
+                for w, alpha, bw, prefix in topo.outer_rings(k):
+                    b = shard if prefix == 1 else shard * prefix
+                    xout = 2 * (w - 1) * (b / n_outer / bw)
+                    for st in range(N_REMAT_STATES):
+                        comm_op[:, mi + n_m * st] += xout
+                    self.comm_run[:, mi] += 2 * (w - 1) * alpha
+            self.mem_run[:, mi] = self.gathered
+        # tile/repeat op tables into (n_slices, n_ext): state-
+        # independent mem cycles over modes; act/comp repeat each state
+        # n_m times so column e = mode + n_m*state lands right
         self.mem_slice = np.tile(mem_op, (1, N_REMAT_STATES))[self.slice_op]
         self.comm_slice = comm_op[self.slice_op]
         self.act_slice = np.repeat(act_states, n_m, axis=1)[self.slice_op]
@@ -556,7 +596,7 @@ class PlanEvaluator:
     def modes_from_decisions(
             self, decisions: Dict[str, Decision]) -> np.ndarray:
         modes = np.zeros(self.n_slices, dtype=np.int8)
-        index = {m: i for i, m in enumerate(MODES)}
+        index = self.mode_index
         for k, name in enumerate(self.op_names):
             dec = decisions.get(name)
             if dec is None:
@@ -568,16 +608,16 @@ class PlanEvaluator:
                     f"layout {int(self.granularity[k])}")
             states = dec.remat_states()
             for j, (m, st) in enumerate(zip(dec.modes, states)):
-                modes[s + j] = index[m] + len(MODES) * st
+                modes[s + j] = index[m] + self.n_modes * st
         return modes
 
     def decisions(self, modes: np.ndarray) -> Dict[str, Decision]:
         out: Dict[str, Decision] = {}
-        n_m = len(MODES)
+        n_m = self.n_modes
         for k, name in enumerate(self.op_names):
             s = int(self.op_start[k])
             e = s + int(self.granularity[k])
-            ms = tuple(MODES[int(m) % n_m] for m in modes[s:e])
+            ms = tuple(self.modes[int(m) % n_m] for m in modes[s:e])
             states = [int(m) // n_m for m in modes[s:e]]
             remat = None
             if any(states):
@@ -601,7 +641,7 @@ class PlanEvaluator:
         """
         st = REMAT_INHERIT if remat is None else (
             REMAT_ON if remat else REMAT_OFF)
-        e = len(MODES) * st
+        e = self.n_modes * st
         bpd = self._bpd(global_batch)
         return float(self.mem_slice[:, e].sum()
                      + (self._resident_slope
@@ -612,7 +652,7 @@ class PlanEvaluator:
         """(steady memory w/o batch terms, comm seconds, peak extra,
         act slope, compute slope) for extended-mode array `modes`."""
         idx = np.arange(self.n_slices)
-        shard = modes % len(MODES)
+        shard = modes % self.n_modes
         mem = float(self.mem_slice[idx, modes].sum())
         comm = float(self.comm_slice[idx, modes].sum())
         act = float(self.act_slice[idx, modes].sum())
@@ -657,7 +697,7 @@ class PlanEvaluator:
         self._act_sl = act_sl
         self._comp_sl = comp_sl
         self._nonzero = np.add.reduceat(
-            ((self._modes % len(MODES)) != 0).astype(np.int64),
+            ((self._modes % self.n_modes) != 0).astype(np.int64),
             self.op_start)
 
     def _run_const_window(self, j: int, k: int, shard_j: int) -> \
@@ -666,7 +706,7 @@ class PlanEvaluator:
         slice j had sharding mode `shard_j` (neighbours read from
         current state; run boundaries ignore the remat state)."""
         modes = self._modes
-        n_m = len(MODES)
+        n_m = self.n_modes
         mem = comm = 0.0
         left_same = j > 0 and int(self.slice_op[j - 1]) == k
         if (not left_same) or int(modes[j - 1]) % n_m != shard_j:
@@ -696,7 +736,7 @@ class PlanEvaluator:
                               - self.act_slice[j, old])
         self._comp_sl += float(self.comp_slice[j, new_mode]
                                - self.comp_slice[j, old])
-        n_m = len(MODES)
+        n_m = self.n_modes
         old_s, new_s = old % n_m, new_mode % n_m
         if old_s != new_s:
             # only a sharding change can create/destroy run boundaries
@@ -787,21 +827,10 @@ def remat_gather_time(op: OperatorDesc, env: CostEnv, mode: str = ZDP,
     recomputes from local weights at no collective cost)."""
     if not env.train or mode == DP:
         return 0.0
-    dev = env.device
+    topo = env.topo
+    k = topo.mode_span(mode)
     p = op.param_bytes / env.n_tp / max(1, split)
-    if mode == ZDP:
-        n = env.n_data
-        if n <= 1:
-            return 0.0
-        bw = min(dev.link_bw(a) for a in env.mesh.axes
-                 if a in ("pod", "data"))
-        return (n - 1) * (dev.alpha + p / n / bw)
-    if mode == ZDP_POD:
-        n = env.n_data_local
-        if n <= 1:
-            return 0.0
-        return (n - 1) * (dev.alpha + p / n / dev.link_bw("data"))
-    raise ValueError(mode)
+    return _rings_pass(p, topo.gather_rings(k), topo.span_ways(k))
 
 
 def remat_act_saving_slope(op: OperatorDesc, env: CostEnv, seq_len: int,
@@ -816,9 +845,8 @@ def remat_compute_slope(op: OperatorDesc, env: CostEnv, seq_len: int,
                         split: int = 1) -> float:
     """Recompute seconds ONE remat'd slice adds, per unit of per-device
     batch: 30% of the slice's (train) compute."""
-    dev = env.device
     comp = (op.flops_per_token * seq_len / env.n_tp
-            / (dev.peak_flops * dev.mxu_efficiency)) / max(1, split)
+            / env.peak_compute) / max(1, split)
     if env.train:
         comp *= 3.0
     return 0.30 * comp

@@ -42,6 +42,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import DeviceInfo, MeshConfig
+from repro.cluster.topology import ClusterSpec
 from repro.core.cost_model import (DP, Decision, PlanCost, _ring_time,
                                    count_remat_slices)
 from repro.core.descriptions import ACT_BYTES, ModelDescription
@@ -136,18 +137,29 @@ def activation_bytes(desc: ModelDescription, batch_local: int) -> float:
 
 
 def tp_activation_time(desc: ModelDescription, device: DeviceInfo,
-                       batch_local: int, tp: int) -> float:
+                       batch_local: int, tp: int,
+                       cluster: Optional[ClusterSpec] = None) -> float:
     """Megatron TP activation collectives per step.
 
     Each layer runs a column-parallel then a row-parallel pair, i.e.
     2 all-reduces of the (b_local, s, d) activation; an all-reduce is
     a reduce-scatter + all-gather, two ring passes over the `model`
     axis (bandwidth regime — see module docstring).
+
+    With a `cluster`, TP occupies the *innermost* `tp` devices of the
+    hierarchy and the ring is priced hierarchically over the levels it
+    spans — a TP group reaching past the node/pod boundary pays that
+    level's (slower) links instead of the flat `ici_bw` the legacy
+    path charged unconditionally.
     """
     if tp <= 1:
         return 0.0
     act = activation_bytes(desc, batch_local)
-    per_allreduce = 2 * _ring_time(act, tp, 0.0, device.ici_bw)
+    if cluster is not None:
+        _, beta = cluster.inner_span_terms(tp)
+        per_allreduce = 2 * act * beta
+    else:
+        per_allreduce = 2 * _ring_time(act, tp, 0.0, device.ici_bw)
     return 2 * max(1, desc.model.n_layers) * per_allreduce
 
 
@@ -159,18 +171,27 @@ def pp_bubble_fraction(pp: int, micro: int) -> float:
 
 
 def pp_boundary_time(desc: ModelDescription, device: DeviceInfo,
-                     batch_local: int, pp: int, micro: int) -> float:
+                     batch_local: int, pp: int, micro: int,
+                     cluster: Optional[ClusterSpec] = None) -> float:
     """Stage-boundary activation sends: each of the `micro` microbatches
-    crosses pp-1 boundaries carrying its share of the activation."""
+    crosses pp-1 boundaries carrying its share of the activation.
+
+    With a `cluster`, PP is placed across the *outermost* (slowest)
+    levels — pipeline traffic is point-to-point and tolerates slow
+    links best — and boundary sends are priced at the bandwidth of the
+    innermost level the pp-way split reaches."""
     if pp <= 1:
         return 0.0
     act = activation_bytes(desc, batch_local)
-    return (pp - 1) * micro * (act / micro) / device.ici_bw
+    bw = (cluster.pp_boundary_bandwidth(pp) if cluster is not None
+          else device.ici_bw)
+    return (pp - 1) * micro * (act / micro) / bw
 
 
 def hybrid_step_time(base_time: float, desc: ModelDescription,
                      device: DeviceInfo, batch: int, f: Factorization,
-                     micro: int = 8) -> float:
+                     micro: int = 8,
+                     cluster: Optional[ClusterSpec] = None) -> float:
     """Step time of the full 3D configuration.
 
     `base_time` is the DP-dimension step time of the 1/(tp*pp) residue
@@ -179,10 +200,12 @@ def hybrid_step_time(base_time: float, desc: ModelDescription,
     sends land on the critical path.
     """
     b_local = max(1, batch // f.dp)
-    t = base_time + tp_activation_time(desc, device, b_local, f.tp)
+    t = base_time + tp_activation_time(desc, device, b_local, f.tp,
+                                       cluster)
     if f.pp > 1:
         t /= (1.0 - pp_bubble_fraction(f.pp, micro))
-        t += pp_boundary_time(desc, device, b_local, f.pp, micro)
+        t += pp_boundary_time(desc, device, b_local, f.pp, micro,
+                              cluster)
     return t
 
 
@@ -216,6 +239,7 @@ class HybridPlan:
     inner: Optional[object] = None      # core.search.SearchResult
     swept: List[Tuple[Factorization, float]] = field(default_factory=list)
     # (factorization, throughput) per feasible sweep point
+    cluster: Optional[ClusterSpec] = None   # topology the plan was priced on
 
     @property
     def dp(self) -> int:

@@ -66,15 +66,22 @@ def remat_summary(decisions: Dict[str, Decision], osdp) -> str:
 
 
 def make_plan(run: RunConfig,
-              device: Optional[DeviceInfo] = None) -> Plan:
-    """Run the OSDP pipeline for a RunConfig with a fixed global batch."""
-    device = device or DeviceInfo()
+              device: Optional[DeviceInfo] = None,
+              cluster=None) -> Plan:
+    """Run the OSDP pipeline for a RunConfig with a fixed global batch.
+
+    `cluster` (a `repro.cluster.ClusterSpec`) prices collectives
+    against the real bandwidth hierarchy; without one the flat
+    (device, mesh) depth-2 adapter applies."""
+    device = device or (cluster.device if cluster is not None
+                        else DeviceInfo())
     desc = describe(run.model, run.shape)
     # selective remat searches from the no-remat base env; bool flags
     # keep the legacy global-checkpointing environment
     env = CostEnv(device, run.mesh,
                   checkpointing=run.osdp.env_checkpointing,
-                  train=(run.shape.kind == "train"))
+                  train=(run.shape.kind == "train"),
+                  cluster=cluster)
     if not run.osdp.enabled:
         decisions = uniform_plan(desc, DP)
         cost = plan_cost(desc, decisions, run.shape.global_batch, env)
@@ -86,7 +93,11 @@ def make_plan(run: RunConfig,
 # --- activation / batch shardings -------------------------------------------
 
 def batch_axes(mesh: Mesh) -> tuple:
-    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    """Mesh axes carrying the global batch: the whole data extent, so
+    cluster-derived meshes (axes named after hierarchy levels) work
+    like the legacy ('pod',) 'data' layouts."""
+    from repro.sharding.specs import data_axis_names
+    return data_axis_names(mesh)
 
 
 def data_sharding(mesh: Mesh, ndim: int = 2,
@@ -98,9 +109,10 @@ def data_sharding(mesh: Mesh, ndim: int = 2,
 
 
 def seq_sharding(mesh: Mesh, ndim: int, seq_axis: int) -> NamedSharding:
-    """Sequence-sharded arrays (long_500k KV cache: batch=1)."""
+    """Sequence-sharded arrays (long_500k KV cache: batch=1) — over the
+    innermost data axis ('data' on legacy meshes)."""
     parts = [None] * ndim
-    parts[seq_axis] = "data"
+    parts[seq_axis] = batch_axes(mesh)[-1]
     return NamedSharding(mesh, P(*parts))
 
 

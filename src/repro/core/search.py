@@ -57,6 +57,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.configs.base import DeviceInfo, MeshConfig, OSDPConfig
+from repro.cluster.topology import ClusterSpec
 from repro.core.cost_model import (DP, MODES, REMAT_INHERIT, REMAT_OFF,
                                    REMAT_ON, ZDP, ZDP_POD, CostEnv,
                                    Decision, PlanCost, PlanEvaluator,
@@ -137,16 +138,17 @@ def auto_granularity(op, env: CostEnv, osdp: OSDPConfig,
     bytes by sharding some other operator instead)."""
     if not (osdp.operator_splitting and op.splittable):
         return 1
-    dev = env.device
-    n = env.n_data
+    topo = env.topo
     rounds = (3 + (1 if env.checkpointing else 0)) if env.train else 1
     gathered_full = op.param_bytes / env.n_tp / max(1, op.layers)
-    # seconds per byte of memory covered by sharding elsewhere
-    shadow = rounds * (n - 1) / n / min(
-        dev.link_bw(a) for a in env.mesh.axes if a in ("pod", "data"))
+    # seconds per byte of memory covered by sharding elsewhere, at the
+    # full-span hierarchical ring rate (= the flat bottleneck ring on a
+    # depth-2 single-pod adapter)
+    ga, gb = topo.gather_terms(topo.depth)
+    shadow = rounds * gb
 
     def total(g: int) -> float:
-        alpha_cost = rounds * (n - 1) * dev.alpha * (g - 1)
+        alpha_cost = rounds * ga * (g - 1)
         return alpha_cost + shadow * gathered_full / g
 
     return min(candidates, key=total)
@@ -155,8 +157,12 @@ def auto_granularity(op, env: CostEnv, osdp: OSDPConfig,
 def _build_items(desc: ModelDescription, env: CostEnv,
                  osdp: OSDPConfig) -> List[SliceItem]:
     modes = [ZDP]
-    if osdp.allow_pod_hierarchical and env.mesh.multi_pod:
-        modes.append(ZDP_POD)
+    if osdp.allow_pod_hierarchical:
+        # level-k ZDP: one extra choice per intermediate hierarchy
+        # level whose span is a real subdivision (depth-2 adapters
+        # expose the legacy ZDP_POD exactly when the mesh is multi-pod)
+        topo = env.topo
+        modes += [topo.span_mode(k) for k in topo.shard_levels]
     selective = osdp.selective_remat
     seq = desc.shape.seq_len
     items: List[SliceItem] = []
@@ -565,7 +571,20 @@ class _SearchContext:
         self.item_slice = np.array(
             [int(self.ev.op_start[op_index[it.op_name]]) + it.slice_idx
              for it in self.items], dtype=np.int64)
-        self.mode_idx = {m: i for i, m in enumerate(MODES)}
+        self.mode_idx = self.ev.mode_index
+        # per-group memory limits: uniform clusters use the config's
+        # limit; heterogeneous clusters bind at the worst group (its
+        # hbm_bytes is its budget — see ClusterSpec.memory_limit)
+        self.limit = env.topo.memory_limit(osdp.memory_limit_bytes)
+        # hierarchical topologies get the stronger upgrade repair (the
+        # solver's level-k mixes overshoot the item model's savings
+        # more often); flat envs — including the flat single-level
+        # residues search_hybrid builds on the legacy no-cluster path —
+        # keep the legacy repair semantics bit-for-bit
+        # (BENCH_search.json decisions are pinned on them).  A topology
+        # is "hierarchical" exactly when it offers level-k items.
+        self._upgrade_repair = (env.cluster is not None
+                                and bool(env.topo.shard_levels))
 
     def _mirror_items(self, remat_on: bool) -> Tuple[List[SliceItem],
                                                      np.ndarray]:
@@ -592,7 +611,7 @@ class _SearchContext:
     def _ext_index(self, choice_key: str, state_map) -> int:
         """Extended evaluator column for one item choice key."""
         m, r = _parse_key(choice_key)
-        return self.mode_idx[m] + len(MODES) * state_map(r)
+        return self.mode_idx[m] + self.ev.n_modes * state_map(r)
 
     def _solve_once(self, global_batch: int, items: List[SliceItem],
                     item_slice: np.ndarray, base_modes: np.ndarray,
@@ -606,7 +625,7 @@ class _SearchContext:
         remat state (inherit for legacy runs, explicit off/on for
         selective and the uniform mirrors).
         """
-        limit = self.osdp.memory_limit_bytes
+        limit = self.limit
         if solver == "dfs":
             choice, nodes = _solve_dfs(items, need, node_budget)
         elif solver == "knapsack":
@@ -645,6 +664,33 @@ class _SearchContext:
                 ev.flip(int(item_slice[i]), self._ext_index(m, state_map))
                 if ev.memory <= limit:
                     break
+            if ev.memory > limit and self._upgrade_repair:
+                # upgrade already-chosen slices toward their max-saving
+                # mode, cheapest marginal dT/dM first (each flip exact
+                # through the evaluator) — on hierarchical topologies
+                # the solver's cover often mixes level-k modes whose
+                # per-run re-gathers the item model cannot see, and
+                # escalating straight to the all-max plan would throw
+                # the whole mix away
+                upgrades = []
+                for i, c in enumerate(choice):
+                    it = items[i]
+                    best = max(it.savings, key=it.savings.get)
+                    if c == best:
+                        continue
+                    dsav = it.savings[best] - (it.savings[c] if c else 0.0)
+                    if dsav <= 0:
+                        continue
+                    dt = (it.extra_time[best]
+                          - (it.extra_time[c] if c else 0.0))
+                    upgrades.append((dt / dsav, i, best))
+                upgrades.sort()
+                for _, i, best in upgrades:
+                    choice[i] = best
+                    ev.flip(int(item_slice[i]),
+                            self._ext_index(best, state_map))
+                    if ev.memory <= limit:
+                        break
             if ev.memory > limit:
                 # escalate every slice to its max-saving mode (ZDP,
                 # remat'd under selective) — the most-sharded plan is
@@ -662,9 +708,9 @@ class _SearchContext:
     def solve(self, global_batch: int) -> SearchResult:
         t0 = _time.perf_counter()
         osdp = self.osdp
-        limit = osdp.memory_limit_bytes
+        limit = self.limit
         bpd = self.ev._bpd(global_batch)
-        n_m = len(MODES)
+        n_m = self.ev.n_modes
 
         if not self.selective:
             base = np.zeros(self.ev.n_slices, dtype=np.int8)
@@ -737,8 +783,9 @@ def search_plan(desc: ModelDescription, global_batch: int, env: CostEnv,
         cost = plan_cost(desc, dec, global_batch, env)
         # feasibility is judged on steady memory, same as the searched
         # path below (transient peaks stay visible in cost.peak_memory)
+        limit = env.topo.memory_limit(osdp.memory_limit_bytes)
         return SearchResult(dec, cost, global_batch,
-                            cost.memory <= osdp.memory_limit_bytes,
+                            cost.memory <= limit,
                             f"forced:{osdp.force_mode}",
                             _time.perf_counter() - t0)
     return _SearchContext(desc, env, osdp).solve(global_batch)
@@ -803,7 +850,8 @@ def search_hybrid(desc: ModelDescription, device: DeviceInfo,
                   batch_candidates: Optional[Sequence[int]] = None,
                   micro: int = 8,
                   candidates: Optional[Sequence[Factorization]] = None,
-                  max_tp: int = 0, max_pp: int = 0) -> HybridPlan:
+                  max_tp: int = 0, max_pp: int = 0,
+                  cluster: Optional[ClusterSpec] = None) -> HybridPlan:
     """The paper's strongest configuration, "3D+OSDP", as a search.
 
     Sweeps every (dp, tp, pp) factorization of `n_devices` (or the
@@ -814,21 +862,39 @@ def search_hybrid(desc: ModelDescription, device: DeviceInfo,
     DeepSpeed-style 3D; no force is 3D+OSDP).  Returns the global
     throughput argmax as a `HybridPlan`.
 
+    Topology placement: with a `cluster` (hierarchical `ClusterSpec`),
+    TP occupies the innermost levels (its per-layer activation
+    all-reduces need the fastest links), PP the outermost (its
+    point-to-point sends tolerate the slowest), and the DP dimension
+    searches over the *residual* hierarchy — so the inner Scheduler
+    sees level-k ZDP items and per-group memory limits of the actual
+    data extent.  Factorizations that do not divide the level
+    structure are skipped as inadmissible.  Without a `cluster` one is
+    inferred from the device (`ClusterSpec.from_device`): flat devices
+    keep the legacy all-ICI pricing; devices declaring
+    `devices_per_node` get a node/cluster hierarchy, fixing the old
+    path that charged `ici_bw` for TP groups spanning nodes.
+
     When the OSDP search is on with operator splitting, the unsplit
     search runs as well and the better of the two is kept (splitting
     trades smaller transient gathers for extra collective latency, so
     neither dominates — same policy as the fig5 benchmark).
 
     Sweep-level optimizations (results unchanged):
-      * the inner problem only depends on (dp, tp*pp) — factorizations
-        sharing a residue and data extent reuse one sliced description
-        and one Scheduler solve (e.g. (4,16,1), (4,8,2), (4,4,4),
-        (4,2,8), (4,1,16) all share dp=4, tp*pp=16),
+      * the inner problem only depends on (dp, residual topology) —
+        factorizations sharing a residue and data extent reuse one
+        sliced description and one Scheduler solve,
       * factorizations are visited best-bound-first and skipped when
         even their compute-only step time (comm >= 0 is dropped — an
         admissible bound) cannot beat the incumbent's throughput.
     """
     t0 = _time.perf_counter()
+    if cluster is not None and cluster.n_devices != n_devices:
+        raise ValueError(
+            f"cluster has {cluster.n_devices} devices, search asked "
+            f"for {n_devices}")
+    topo = cluster if cluster is not None \
+        else ClusterSpec.from_device(device, n_devices)
     if candidates is None:
         candidates = factorizations(n_devices, max_tp, max_pp)
     seq = desc.shape.seq_len
@@ -836,25 +902,37 @@ def search_hybrid(desc: ModelDescription, device: DeviceInfo,
                else [desc.shape.global_batch])
     n_layers = max(1, desc.model.n_layers)
 
+    # TP innermost, PP outermost: the data residue of each admissible
+    # factorization (skip those that don't divide the level structure)
+    residues: Dict[Factorization, ClusterSpec] = {}
+    for f in candidates:
+        if f.pp > n_layers:
+            continue
+        try:
+            residues[f] = topo.consume_inner(f.tp).consume_outer(f.pp)
+        except ValueError:
+            continue
+
     # admissible throughput upper bound: the inner step time is at
     # least the residue's compute time (the only mode-independent term;
     # under selective remat the bound drops the 1.30 recompute factor —
-    # a fully-no-remat plan is reachable, so 1.0x stays admissible)
+    # a fully-no-remat plan is reachable, so 1.0x stays admissible).
+    # Heterogeneous fleets run lockstep at the slowest group's pace.
     flops_tok = sum(op.flops_per_token for op in desc.operators)
     comp_unit = seq * 3.0 * (1.30 if osdp.env_checkpointing else 1.0) \
-        / (device.peak_flops * device.mxu_efficiency)
+        / (topo.effective_peak_flops * device.mxu_efficiency)
 
     def thr_bound(f: Factorization) -> float:
         best_b = 0.0
         for b in batches:
             bpd = max(1, b // f.dp)
             t_comp = flops_tok / (f.tp * f.pp) * comp_unit * bpd
-            t = hybrid_step_time(t_comp, desc, device, b, f, micro)
+            t = hybrid_step_time(t_comp, desc, device, b, f, micro, topo)
             if t > 0:
                 best_b = max(best_b, b * seq / t)
         return best_b
 
-    admissible = [f for f in candidates if f.pp <= n_layers]
+    admissible = list(residues)
     bounds = {f: thr_bound(f) for f in admissible}
     admissible.sort(key=bounds.__getitem__, reverse=True)
 
@@ -864,7 +942,7 @@ def search_hybrid(desc: ModelDescription, device: DeviceInfo,
                                             operator_splitting=False))
 
     slice_cache: Dict[int, ModelDescription] = {}
-    sched_cache: Dict[Tuple[int, int, int], SearchResult] = {}
+    sched_cache: Dict[Tuple, SearchResult] = {}
 
     best: Optional[HybridPlan] = None
     fallback: Optional[HybridPlan] = None   # min-memory infeasible plan
@@ -879,19 +957,21 @@ def search_hybrid(desc: ModelDescription, device: DeviceInfo,
         sub = slice_cache.get(mp)
         if sub is None:
             sub = slice_cache[mp] = slice_description(desc, f.tp, f.pp)
+        data_spec = residues[f]
         env = CostEnv(device, MeshConfig((f.dp, 1), ("data", "model")),
                       checkpointing=osdp.env_checkpointing,
-                      include_tp=False)
+                      include_tp=False, cluster=data_spec)
         local: Optional[HybridPlan] = None
         for vi, cfg in enumerate(variants):
-            key = (f.dp, mp, vi)
+            key = (mp, data_spec, vi)
             res = sched_cache.get(key)
             if res is None:
                 res = sched_cache[key] = schedule(
                     sub, env, cfg, batch_candidates=batches)
             t = hybrid_step_time(res.cost.time, desc, device,
-                                 res.batch_size, f, micro)
-            plan = _as_hybrid_plan(desc, device, f, res, t, micro, cfg)
+                                 res.batch_size, f, micro, topo)
+            plan = _as_hybrid_plan(desc, device, f, res, t, micro, cfg,
+                                   topo)
             if not res.feasible:
                 if fallback is None or (plan.cost.memory
                                         < fallback.cost.memory):
@@ -921,7 +1001,7 @@ def search_hybrid(desc: ModelDescription, device: DeviceInfo,
                 stage_bounds=stage_bounds(desc.model.n_layers, f.pp),
                 decisions={}, cost=PlanCost(inf, inf, inf, 0.0, 0.0, 0.0),
                 batch_size=batches[0], micro=micro, feasible=False,
-                dp_strategy="inadmissible", inner=None)
+                dp_strategy="inadmissible", inner=None, cluster=topo)
         else:
             best = fallback
     best.swept = swept
@@ -932,10 +1012,11 @@ def search_hybrid(desc: ModelDescription, device: DeviceInfo,
 
 def _as_hybrid_plan(desc: ModelDescription, device: DeviceInfo,
                     f: Factorization, res: SearchResult, t: float,
-                    micro: int, cfg: OSDPConfig) -> HybridPlan:
+                    micro: int, cfg: OSDPConfig,
+                    cluster: Optional[ClusterSpec] = None) -> HybridPlan:
     b_local = max(1, res.batch_size // f.dp)
-    tp_t = tp_activation_time(desc, device, b_local, f.tp)
-    pp_t = pp_boundary_time(desc, device, b_local, f.pp, micro)
+    tp_t = tp_activation_time(desc, device, b_local, f.tp, cluster)
+    pp_t = pp_boundary_time(desc, device, b_local, f.pp, micro, cluster)
     tokens = res.batch_size * desc.shape.seq_len
     cost = PlanCost(
         memory=res.cost.memory, peak_memory=res.cost.peak_memory,
@@ -950,4 +1031,4 @@ def _as_hybrid_plan(desc: ModelDescription, device: DeviceInfo,
         stage_bounds=stage_bounds(desc.model.n_layers, f.pp),
         decisions=res.decisions, cost=cost, batch_size=res.batch_size,
         micro=micro, feasible=res.feasible, dp_strategy=strategy,
-        inner=res)
+        inner=res, cluster=cluster)

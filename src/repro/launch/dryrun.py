@@ -46,16 +46,19 @@ def _attach_shardings(tree, shardings):
 
 def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
                 osdp: Optional[OSDPConfig] = None, compile_: bool = True,
-                verbose: bool = True) -> Dict[str, Any]:
+                verbose: bool = True,
+                device=None) -> Dict[str, Any]:
     """Lower (+ compile) one (arch, shape, mesh). Returns the record for
-    EXPERIMENTS.md §Dry-run / §Roofline."""
+    EXPERIMENTS.md §Dry-run / §Roofline.  `device` (a DeviceInfo, e.g.
+    from `DeviceInfo.preset`) changes the planner's hardware constants;
+    the forced host mesh stays the same."""
     t_start = time.perf_counter()
     model_cfg = get_arch(arch)
     shape = get_shape(shape_name)
     mesh_cfg = MULTI_POD_MESH if multi_pod else SINGLE_POD_MESH
     osdp = osdp or OSDPConfig()
     run = RunConfig(model=model_cfg, shape=shape, mesh=mesh_cfg, osdp=osdp)
-    plan = make_plan(run)
+    plan = make_plan(run, device)
     mesh = make_mesh_from_config(mesh_cfg)
     built = build_model(run, plan, mesh)
     model = built.model
@@ -186,9 +189,14 @@ def main(argv=None) -> int:
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--no-compile", action="store_true")
     ap.add_argument("--force-mode", default=None, choices=["DP", "ZDP"])
+    ap.add_argument("--device", default=None, metavar="PRESET",
+                    help="DeviceInfo preset for the planner "
+                         "(tpu-v5e, tpu-v4, a100-80g, h100-sxm)")
     ap.add_argument("--out", default=None, help="write records JSON here")
     args = ap.parse_args(argv)
 
+    from repro.configs import DeviceInfo
+    device = DeviceInfo.preset(args.device) if args.device else None
     osdp = OSDPConfig(force_mode=args.force_mode) if args.force_mode \
         else None
     combos = []
@@ -209,7 +217,7 @@ def main(argv=None) -> int:
     for arch, shape, mp in combos:
         try:
             records.append(lower_combo(arch, shape, multi_pod=mp,
-                                       osdp=osdp,
+                                       osdp=osdp, device=device,
                                        compile_=not args.no_compile))
         except Exception as e:  # noqa: BLE001 - report and continue
             traceback.print_exc()

@@ -35,6 +35,19 @@ def make_hybrid_mesh(plan_or_factorization):
     return jax.make_mesh(cfg.shape, cfg.axes)
 
 
+def make_cluster_mesh(spec, model_parallel: int = 1,
+                      pipeline_parallel: int = 1):
+    """Mesh whose axis order mirrors a `ClusterSpec`'s hierarchy: one
+    axis per (ways > 1) level, outermost first, then `model` (and
+    `pipe` when pipelined) — so jax's device order walks the innermost
+    (fastest) level fastest and every level-k ZDP axis lands on the
+    physical links the cost model priced it against.
+    """
+    cfg = spec.mesh_config(model_parallel=model_parallel,
+                           pipeline_parallel=pipeline_parallel)
+    return jax.make_mesh(cfg.shape, cfg.axes)
+
+
 def make_host_mesh():
     """1x1 mesh on the real local device (smoke tests / examples)."""
     return jax.make_mesh((1, 1), ("data", "model"))

@@ -17,8 +17,8 @@ import sys
 
 import jax
 
-from repro.configs import (MeshConfig, OSDPConfig, RunConfig, get_arch,
-                           get_shape, reduced)
+from repro.configs import (DeviceInfo, MeshConfig, OSDPConfig, RunConfig,
+                           get_arch, get_shape, reduced)
 from repro.core.plan import make_plan
 from repro.models.registry import build_model
 from repro.optim import AdamWConfig
@@ -37,6 +37,9 @@ def main(argv=None) -> int:
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--warmup", type=int, default=100)
     ap.add_argument("--memory-gib", type=float, default=16.0)
+    ap.add_argument("--device", default=None, metavar="PRESET",
+                    help="DeviceInfo preset the planner prices against "
+                         "(tpu-v5e, tpu-v4, a100-80g, h100-sxm)")
     ap.add_argument("--force-mode", default=None, choices=["DP", "ZDP"])
     ap.add_argument("--no-osdp", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
@@ -59,7 +62,8 @@ def main(argv=None) -> int:
                       memory_limit_bytes=args.memory_gib * 2**30,
                       force_mode=args.force_mode)
     run = RunConfig(model=model_cfg, shape=shape, mesh=mesh_cfg, osdp=osdp)
-    plan = make_plan(run)
+    device = DeviceInfo.preset(args.device) if args.device else None
+    plan = make_plan(run, device)
     print(plan.summary())
     mesh = jax.make_mesh(mesh_cfg.shape, mesh_cfg.axes) if n_dev > 1 else None
     built = build_model(run, plan, mesh)

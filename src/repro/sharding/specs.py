@@ -31,6 +31,7 @@ import numpy as np
 from jax.ad_checkpoint import checkpoint_name
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.cluster.topology import parse_level_mode
 from repro.core.cost_model import DP, ZDP, ZDP_POD, Decision
 
 
@@ -147,13 +148,28 @@ def layout_for(spec: WeightSpec,
                             for i, (m, s, z, idxs) in enumerate(merged)])
 
 
+def data_axis_names(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes carrying the data-parallel extent, outermost first
+    (every axis that is not model/pipe — covers cluster-derived meshes
+    whose axes are hierarchy level names).  The single definition of
+    this rule; `core.plan.batch_axes` delegates here."""
+    return tuple(a for a in mesh.axis_names if a not in ("model", "pipe"))
+
+
 def _zdp_axes_names(mode: str, mesh: Mesh) -> Optional[Tuple[str, ...]]:
+    """Mesh axes a sharding mode spreads the weight over.  ZDP takes
+    the whole data extent; level-k modes (`ZDP@k` / the depth-2 alias
+    ZDP_POD) take the k innermost (trailing) data axes."""
     if mode == DP:
         return None
+    data_axes = data_axis_names(mesh)
     if mode == ZDP:
-        return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+        return data_axes
     if mode == ZDP_POD:
-        return ("data",)
+        return data_axes[-1:]
+    k = parse_level_mode(mode)
+    if k is not None:
+        return data_axes[-k:]
     raise ValueError(mode)
 
 
@@ -168,8 +184,9 @@ def segment_sharding(spec: WeightSpec, seg: Segment, seg_shape: Tuple[int, ...],
         if seg_shape[spec.zdp_axis] % n == 0:
             parts[spec.zdp_axis] = names if len(names) > 1 else names[0]
         elif (len(names) > 1
-              and seg_shape[spec.zdp_axis] % mesh.shape["data"] == 0):
-            parts[spec.zdp_axis] = "data"   # fall back to in-pod sharding
+              and seg_shape[spec.zdp_axis] % mesh.shape[names[-1]] == 0):
+            # fall back to the innermost data axis (in-pod sharding)
+            parts[spec.zdp_axis] = names[-1]
         # else: leave replicated (divisibility guard; cost model's saving
         # for this segment is then optimistic — flagged by tests)
     return NamedSharding(mesh, P(*parts))

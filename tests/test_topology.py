@@ -1,0 +1,420 @@
+"""Topology layer: hierarchical ClusterSpec pricing, the depth-2
+flat adapter (byte-identical to the legacy two-bandwidth model),
+level-monotonicity properties, level-k plan evaluation, heterogeneous
+memory feasibility, and hybrid TP/PP topology placement."""
+import math
+import random
+
+import pytest
+
+from repro.cluster.topology import (ClusterLevel, ClusterSpec, DeviceGroup,
+                                    gpu_cluster, mixed_memory_fleet,
+                                    tpu_multipod)
+from repro.configs import (DeviceInfo, MULTI_POD_MESH, SINGLE_POD_MESH,
+                           MeshConfig, OSDPConfig, get_arch, get_shape)
+from repro.core.cost_model import (DP, ZDP, ZDP_POD, CostEnv, Decision,
+                                   PlanEvaluator, op_cost, plan_cost,
+                                   uniform_plan)
+from repro.core.descriptions import OperatorDesc, describe
+from repro.core.search import schedule, search_hybrid, search_plan
+
+DEV = DeviceInfo()
+
+
+def _flat_ring(nbytes, n, alpha, bw):
+    return 0.0 if n <= 1 else (n - 1) * (alpha + nbytes / n / bw)
+
+
+# --- the depth-2 degenerate case ---------------------------------------------
+
+def test_depth2_adapter_shape():
+    spec = ClusterSpec.from_flat(DEV, MULTI_POD_MESH)
+    assert spec.depth == 2
+    assert spec.n_devices == 32
+    assert spec.span_ways(1) == 16
+    assert spec.mode_names == (DP, ZDP, ZDP_POD)
+    assert spec.mode_span(ZDP) == 2
+    assert spec.mode_span(ZDP_POD) == 1
+    assert spec.shard_ways(ZDP) == 32
+    assert spec.shard_ways(ZDP_POD) == 16
+    assert spec.shard_ways(DP) == 1
+
+
+def test_hierarchical_ring_equals_flat_ring_at_depth_1():
+    """A single-level span must price exactly like the classic flat
+    ring (n-1)(alpha + B/n/bw) — the degenerate identity every deeper
+    formula builds on (1e-12, per the refactor contract)."""
+    for n, bw, nbytes in ((8, 12e9, 1e9), (16, 50e9, 3.7e8),
+                          (256, 450e9, 1e11), (2, 1e9, 1.0)):
+        spec = ClusterSpec(
+            levels=(ClusterLevel("data", n, bw, DEV.alpha),), device=DEV)
+        got = spec.ring_time(nbytes, 1)
+        want = _flat_ring(nbytes, n, DEV.alpha, bw)
+        assert got == pytest.approx(want, rel=1e-12)
+
+
+def test_depth2_single_pod_op_cost_matches_legacy_flat_formula():
+    """On a single-pod mesh the depth-2 adapter must reproduce the
+    pre-topology flat formulas to 1e-12: ZDP = rounds flat rings over
+    the data extent, DP = 2 rings."""
+    env = CostEnv(DEV, SINGLE_POD_MESH, checkpointing=False)
+    op = OperatorDesc("op", 10**9, 1e9, 64.0, layers=4)
+    n = env.n_data
+    p = op.param_bytes / env.n_tp
+    c_dp = op_cost(op, Decision("op", (DP,)), 8, 1024, env)
+    want_dp = 2 * _flat_ring(p, n, DEV.alpha, DEV.ici_bw)
+    assert c_dp.comm_time == pytest.approx(want_dp, rel=1e-12)
+    c_z = op_cost(op, Decision("op", (ZDP,)), 8, 1024, env)
+    want_z = 3 * _flat_ring(p, n, DEV.alpha, DEV.ici_bw)
+    assert c_z.comm_time == pytest.approx(want_z, rel=1e-12)
+
+
+def test_depth2_multi_pod_zdp_pod_matches_legacy():
+    """ZDP_POD pricing (in-pod gather + cross-pod grad all-reduce) is
+    unchanged by the hierarchical refactor."""
+    env = CostEnv(DEV, MULTI_POD_MESH, checkpointing=False)
+    op = OperatorDesc("op", 10**9, 0.0, 0.0, layers=1)
+    p = op.param_bytes / env.n_tp
+    n_l, n_p = 16, 2
+    c = op_cost(op, Decision("op", (ZDP_POD,)), 8, 1024, env)
+    want = (3 * _flat_ring(p, n_l, DEV.alpha, DEV.ici_bw)
+            + 2 * _flat_ring(p / n_l, n_p, DEV.alpha, DEV.dci_bw))
+    assert c.comm_time == pytest.approx(want, rel=1e-12)
+
+
+def test_multi_pod_zdp_priced_hierarchically_not_bottleneck():
+    """Full-span ZDP on a multi-pod adapter now runs one ring per
+    level instead of a flat ring at the bottleneck (DCI) bandwidth —
+    strictly cheaper, and equal to the explicit per-level sum."""
+    env = CostEnv(DEV, MULTI_POD_MESH, checkpointing=False)
+    op = OperatorDesc("op", 10**9, 0.0, 0.0, layers=1)
+    p = op.param_bytes / env.n_tp
+    n_l, n_p = 16, 2
+    n = n_l * n_p
+    c = op_cost(op, Decision("op", (ZDP,)), 8, 1024, env)
+    want = 3 * ((n_l - 1) * (DEV.alpha + p / n / DEV.ici_bw)
+                + (n_p - 1) * (DEV.alpha + p * n_l / n / DEV.dci_bw))
+    assert c.comm_time == pytest.approx(want, rel=1e-12)
+    bottleneck = 3 * _flat_ring(p, n, DEV.alpha, DEV.dci_bw)
+    assert c.comm_time < bottleneck
+
+
+# --- level monotonicity properties -------------------------------------------
+
+def _three_level(bw2=4e9, ways=(4, 4, 4)):
+    return ClusterSpec(levels=(
+        ClusterLevel("chip", ways[0], 50e9, 1e-6),
+        ClusterLevel("node", ways[1], 20e9, 1e-6),
+        ClusterLevel("pod", ways[2], bw2, 1e-6)), device=DEV)
+
+
+def test_deeper_spans_shard_more_but_cost_more():
+    """Widening the span of a collective can only add time (more ways
+    at slower levels never cheapen it) while sharding more ways."""
+    spec = _three_level()
+    nbytes = 1e9
+    times = [spec.ring_time(nbytes, k) for k in range(1, 4)]
+    ways = [spec.span_ways(k) for k in range(1, 4)]
+    assert times == sorted(times)
+    assert times[0] < times[1] < times[2]
+    assert ways == [4, 16, 64]
+
+
+@pytest.mark.parametrize("slow_bw", [1e9, 5e9, 10e9])
+def test_more_ways_at_a_slower_level_never_cheapens(slow_bw):
+    """Growing the ways of any (slower-or-equal) outer level never
+    reduces a collective spanning it: the hierarchy price is monotone
+    in every level's fan-out."""
+    base = _three_level(bw2=slow_bw)
+    for extra in (2, 4):
+        grown = _three_level(bw2=slow_bw, ways=(4, 4, 4 * extra))
+        for nbytes in (1e6, 1e9, 1e11):
+            assert grown.ring_time(nbytes, 3) \
+                >= base.ring_time(nbytes, 3) - 1e-15
+
+
+def test_span_rings_prefix_products():
+    spec = _three_level()
+    rings = spec.gather_rings(3)
+    assert [(w, pre) for w, _, _, pre in rings] == [(4, 1), (4, 4),
+                                                   (4, 16)]
+    outer = spec.outer_rings(1)
+    assert [(w, pre) for w, _, _, pre in outer] == [(4, 1), (4, 4)]
+
+
+# --- level-k plans through the evaluator -------------------------------------
+
+def test_evaluator_matches_plan_cost_on_level_k_plans():
+    """Random plans over the full level-k mode set of a depth-3 spec
+    must evaluate identically through the tables and the direct
+    op_cost walk."""
+    spec = _three_level()
+    env = CostEnv(DEV, cluster=spec, checkpointing=False)
+    desc = describe(get_arch("phi4-mini-3.8b"), get_shape("train_4k"))
+    modes = env.topo.mode_names
+    assert modes == (DP, ZDP, "ZDP@1", "ZDP@2")
+    rng = random.Random(7)
+    for trial in range(5):
+        decs = {}
+        for op in desc.operators:
+            if not op.decidable:
+                decs[op.name] = Decision(op.name, (DP,))
+                continue
+            g = rng.choice([1, 2, 4]) if op.splittable else 1
+            decs[op.name] = Decision(
+                op.name, tuple(rng.choice(modes) for _ in range(g)))
+        for batch in (64, 256):
+            want = plan_cost(desc, decs, batch, env)
+            ev = PlanEvaluator.for_decisions(desc, env, decs)
+            got = ev.plan_cost(ev.modes_from_decisions(decs), batch)
+            for f in ("memory", "peak_memory", "time", "comm_time",
+                      "compute_time"):
+                assert getattr(got, f) == pytest.approx(
+                    getattr(want, f), rel=1e-9, abs=1e-12), (trial, f)
+
+
+def test_level_k_flip_deltas_track_full_evaluation():
+    spec = _three_level()
+    env = CostEnv(DEV, cluster=spec, checkpointing=False)
+    desc = describe(get_arch("qwen1.5-0.5b"), get_shape("train_4k"))
+    gran = {op.name: (4 if op.splittable else 1)
+            for op in desc.decidable()}
+    ev = PlanEvaluator(desc, env, gran)
+    import numpy as np
+    ev.begin(np.zeros(ev.n_slices, dtype=np.int8), 128)
+    rng = random.Random(3)
+    for step in range(150):
+        ev.flip(rng.randrange(ev.n_slices), rng.randrange(ev.n_ext))
+        if step % 30 == 0:
+            want = plan_cost(desc, ev.decisions(ev.current_modes), 128,
+                             env)
+            got = ev.result()
+            assert got.memory == pytest.approx(want.memory, rel=1e-9)
+            assert got.time == pytest.approx(want.time, rel=1e-9)
+
+
+def test_search_uses_level_k_modes_on_deep_topologies():
+    """With a 3-level spec whose outer level is slow, the searched plan
+    should place some mass at an intermediate level (ZDP@k) — the new
+    axis the flat model could not express."""
+    spec = _three_level(bw2=2e9)
+    env = CostEnv(DEV, cluster=spec, checkpointing=True)
+    desc = describe(get_arch("phi4-mini-3.8b"), get_shape("train_4k"))
+    res = search_plan(desc, 256, env, OSDPConfig(
+        memory_limit_bytes=16 * 2**30, allow_pod_hierarchical=True))
+    assert res.feasible
+    used = {m for d in res.decisions.values() for m in d.modes}
+    assert any(m.startswith("ZDP@") for m in used), used
+
+
+# --- heterogeneous memory ----------------------------------------------------
+
+def test_mixed_memory_feasibility_flip():
+    """A fleet of small+large devices whose even-shard footprint busts
+    the small group's budget: infeasible under the uniform flat model
+    (limit = worst device, even shards), feasible with
+    capacity-weighted sharding against per-group limits."""
+    desc = describe(get_arch("arctic-480b"), get_shape("train_4k"))
+    het = mixed_memory_fleet(128, 24, 128, 80, pod_size=64, device=DEV)
+    # uniform view of the same fleet: every device gets the worst
+    # group's budget and an even 1/N shard
+    flat_env = CostEnv(DEV, MeshConfig((256, 1), ("data", "model")),
+                       checkpointing=True)
+    flat = schedule(desc, flat_env, OSDPConfig(
+        memory_limit_bytes=het.min_hbm, allow_pod_hierarchical=False),
+        batch_candidates=[256])
+    het_env = CostEnv(DEV, cluster=het, checkpointing=True)
+    aware = schedule(desc, het_env, OSDPConfig(
+        memory_limit_bytes=het.min_hbm, allow_pod_hierarchical=True),
+        batch_candidates=[256])
+    assert not flat.feasible
+    assert aware.feasible
+    assert aware.cost.memory <= het.min_hbm
+
+
+def test_weighted_shard_ways():
+    het = mixed_memory_fleet(8, 16, 8, 48, pod_size=8, device=DEV)
+    # total capacity 8*16 + 8*48 = 512 GiB; binding group 16 GiB
+    assert het.shard_ways(ZDP) == pytest.approx(512 / 16)
+    assert het.shard_ways(ZDP) > het.n_devices
+    # inner spans stay within one (uniform) pod: even sharding
+    assert het.shard_ways(ZDP_POD) == 8
+    assert het.memory_limit(123.0) == 16 * 2**30
+    uniform = tpu_multipod(2, 8, DEV)
+    assert uniform.memory_limit(123.0) == 123.0
+
+
+def test_group_coverage_validated():
+    with pytest.raises(ValueError):
+        ClusterSpec(levels=(ClusterLevel("data", 8, 50e9),), device=DEV,
+                    groups=(DeviceGroup("g", 4, 16 * 2**30),))
+
+
+def test_interior_degenerate_levels_rejected():
+    """A ways>1 level outside a ways==1 level would desynchronize the
+    level-index <-> mesh-axis mapping (mesh_config drops ways-1 axes),
+    so construction rejects it; trailing (outermost) ways-1 levels are
+    fine — from_flat relies on them."""
+    with pytest.raises(ValueError):
+        ClusterSpec(levels=(ClusterLevel("chip", 4, 50e9),
+                            ClusterLevel("node", 1, 20e9),
+                            ClusterLevel("pod", 2, 2e9)), device=DEV)
+    ClusterSpec(levels=(ClusterLevel("chip", 4, 50e9),
+                        ClusterLevel("pod", 1, 2e9)), device=DEV)
+    # degenerate data axis: from_flat folds the pod extent inward
+    folded = ClusterSpec.from_flat(
+        DEV, MeshConfig((2, 16), ("pod", "model")))
+    assert folded.span_ways(1) == 2
+    assert folded.levels[0].bandwidth == DEV.dci_bw
+
+
+# --- hybrid placement on a topology ------------------------------------------
+
+A100_2SERVER = DeviceInfo(
+    name="2x8-a100", peak_flops=312e12, hbm_bytes=40 * 2**30,
+    hbm_bw=1555e9, ici_bw=300e9, dci_bw=12.5e9, alpha=5e-6,
+    mxu_efficiency=0.45, devices_per_node=8)
+
+
+def test_tp_spanning_node_boundary_priced_at_slow_link():
+    """Regression for the legacy bug: TP all-reduces were charged
+    `ici_bw` unconditionally even when the TP group spanned the
+    node/pod boundary.  On a 2-node NVLink/IB cluster, tp=16 must pay
+    the slow inter-node link and cost far more than tp=8."""
+    from repro.core.hybrid import tp_activation_time
+    desc = describe(get_arch("qwen1.5-0.5b"), get_shape("train_4k"))
+    cluster = ClusterSpec.from_device(A100_2SERVER, 16)
+    assert cluster.depth == 2 and cluster.span_ways(1) == 8
+    t8 = tp_activation_time(desc, A100_2SERVER, 8, 8, cluster)
+    t16 = tp_activation_time(desc, A100_2SERVER, 8, 16, cluster)
+    t16_legacy = tp_activation_time(desc, A100_2SERVER, 8, 16)
+    # the legacy path underpriced the spanning group by ~ici/dci
+    assert t16 > 5 * t16_legacy
+    assert t16 > 2 * t8
+    # within the node, topology and legacy pricing agree
+    assert t8 == pytest.approx(
+        tp_activation_time(desc, A100_2SERVER, 8, 8), rel=1e-12)
+
+
+def test_search_hybrid_keeps_tp_inside_the_node():
+    """Given the choice, the hybrid search on a 2-node cluster must
+    not pick a TP extent that spans the IB link when an in-node
+    factorization exists."""
+    desc = describe(get_arch("phi4-mini-3.8b"), get_shape("train_4k"),
+                    per_layer=False)
+    cluster = ClusterSpec.from_device(A100_2SERVER, 16)
+    osdp = OSDPConfig(memory_limit_bytes=12 * 2**30,
+                      checkpointing=True)
+    plan = search_hybrid(desc, A100_2SERVER, 16, osdp,
+                         batch_candidates=[32], cluster=cluster)
+    assert plan.feasible
+    assert plan.tp <= 8, plan.factorization
+    assert plan.cluster is cluster
+
+
+def test_pp_boundary_bandwidth_outermost():
+    spec = _three_level()
+    # pp=4 splits at the outermost level; pp=16 reaches the middle one
+    assert spec.pp_boundary_bandwidth(4) == 4e9
+    assert spec.pp_boundary_bandwidth(16) == 20e9
+    assert spec.pp_boundary_bandwidth(1) == 50e9
+
+
+def test_consume_inner_outer():
+    spec = _three_level()                      # 4 x 4 x 4
+    resid = spec.consume_inner(8)              # tp=8: chip + half node
+    assert [l.ways for l in resid.levels] == [2, 4]
+    resid2 = spec.consume_outer(4)             # pp=4: the pod level
+    assert [l.ways for l in resid2.levels] == [4, 4]
+    both = spec.consume_inner(4).consume_outer(4)
+    assert [l.ways for l in both.levels] == [4]
+    with pytest.raises(ValueError):
+        spec.consume_inner(3)
+    with pytest.raises(ValueError):
+        spec.consume_inner(128)
+
+
+# --- mesh derivation ---------------------------------------------------------
+
+def test_mesh_config_from_cluster():
+    spec = _three_level()
+    cfg = spec.mesh_config(model_parallel=2)
+    assert cfg.shape == (4, 4, 4, 2)
+    assert cfg.axes == ("pod", "node", "chip", "model")
+    # MeshConfig.data_parallel only counts legacy pod/data axis names;
+    # cluster-aware code reads the extent from the spec instead
+    assert cfg.data_parallel == 4
+    assert cfg.model_parallel == 2
+    flat = ClusterSpec.from_flat(DEV, MULTI_POD_MESH)
+    cfg2 = flat.mesh_config(model_parallel=16)
+    assert cfg2.shape == (2, 16, 16)
+    assert cfg2.axes == ("pod", "data", "model")
+
+
+def test_to_flat_collapses_to_bottleneck():
+    spec = _three_level(bw2=4e9)
+    dev, mesh = spec.to_flat()
+    assert dev.ici_bw == 50e9
+    assert dev.dci_bw == 4e9             # slowest outer level
+    assert mesh.shape == (16, 4, 1)
+    assert mesh.axes == ("pod", "data", "model")
+
+
+def test_level_k_plan_materializes_on_cluster_mesh():
+    """End-to-end: a searched level-k plan must build real
+    NamedShardings on the cluster-derived mesh (subprocess with 64
+    forced host devices) — regression for batch/data axis assumptions
+    hard-coded to the legacy ('pod', 'data') names."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=64"
+        from repro.cluster import ClusterLevel, ClusterSpec
+        from repro.configs import (DeviceInfo, OSDPConfig, RunConfig,
+                                   get_arch, get_shape)
+        from repro.core.plan import make_plan
+        from repro.launch.mesh import make_cluster_mesh
+        from repro.models.registry import (build_model, input_specs,
+                                           input_shardings)
+        spec = ClusterSpec(levels=(
+            ClusterLevel("chip", 4, 50e9, 1e-6),
+            ClusterLevel("node", 4, 20e9, 1e-6),
+            ClusterLevel("pod", 4, 2e9, 1e-6)), device=DeviceInfo())
+        run = RunConfig(
+            model=get_arch("phi4-mini-3.8b"), shape=get_shape("train_4k"),
+            mesh=spec.mesh_config(), osdp=OSDPConfig(
+                memory_limit_bytes=16 * 2**30,
+                allow_pod_hierarchical=True))
+        plan = make_plan(run, cluster=spec)
+        used = {m for d in plan.decisions.values() for m in d.modes}
+        assert any(m.startswith("ZDP@") for m in used), used
+        mesh = make_cluster_mesh(spec)
+        built = build_model(run, plan, mesh)
+        specs = [str(sh.spec) for sh in built.shardings.values()]
+        assert any("'chip'" in s or "'node'" in s for s in specs), specs
+        sh = input_shardings(run, mesh, input_specs(run))
+        assert "'pod', 'node', 'chip'" in str(sh["tokens"].spec)
+        print("MATERIALIZED-OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    r = subprocess.run([sys.executable, "-c", script],
+                       capture_output=True, text=True, env=env,
+                       timeout=540)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "MATERIALIZED-OK" in r.stdout
+
+
+def test_presets_build():
+    g = gpu_cluster(8, 8, nvlink_bw=450e9, ib_bw=50e9)
+    assert g.n_devices == 64 and g.depth == 2
+    g3 = gpu_cluster(16, 8, spine_nodes=4, ib_bw=50e9, spine_bw=25e9)
+    assert g3.depth == 3 and g3.n_devices == 128
+    t = tpu_multipod(4, 64)
+    assert t.n_devices == 256
+    assert "cluster[256]" in t.summary()
