@@ -1,0 +1,210 @@
+"""Serving throughput: static vs continuous vs planned.
+
+Two row families, recorded in ``BENCH_search.json`` under ``"serving"``:
+
+  * **engine rows** (executed on the host): a reduced model serves a
+    mixed-length request set twice — with the legacy static batch
+    engine (arrival-order groups, lockstep decode to the group's
+    longest request) and with the continuous engine at the SAME slot
+    count.  Both engines issue batched decode steps of identical
+    shape, so the deterministic metric is *decode steps per useful
+    token*: continuous batching must strictly beat static on every
+    mixed row (finished slots are re-admitted from the queue instead
+    of idling until the group's stragglers drain).  Wall clock is
+    reported for reference but never asserted.
+
+  * **planner rows** (cost model): `search_serve` against full-size
+    models and device presets.  The headline assert is the
+    feasibility flip — a (model, memory-limit) pair the unplanned
+    (1,1)-mesh DP engine cannot fit, served by the searched
+    sharding + admission plan.
+
+``--quick`` shrinks the engine workload for CI; ``--check`` asserts
+>= 3 strict continuous-over-static engine wins, >= 1 feasibility
+flip, and the wall-clock ceiling.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional
+
+import numpy as np
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_search.json"
+CEILING_S = 420.0          # --check wall-clock ceiling (whole run)
+
+ENGINE_ARCHS = ("qwen1.5-0.5b", "mamba2-2.7b", "hymba-1.5b")
+
+
+def _mixed_lengths(n_req: int, long_new: int, short_new: int) -> List[int]:
+    """Every 4th request decodes long, the rest short — the skew that
+    makes lockstep batching idle 3/4 of its slots."""
+    return [long_new if i % 4 == 0 else short_new for i in range(n_req)]
+
+
+def _run_engine_row(arch: str, quick: bool, out) -> dict:
+    import jax
+    from repro.configs import (MeshConfig, OSDPConfig, RunConfig, get_arch,
+                               get_shape, reduced)
+    from repro.models.registry import build_model
+    from repro.serving.engine import ContinuousEngine, Engine, Request
+
+    cfg = reduced(get_arch(arch))
+    run = RunConfig(model=cfg, shape=get_shape("decode_32k"),
+                    mesh=MeshConfig((1, 1), ("data", "model")),
+                    osdp=OSDPConfig(enabled=False))
+    built = build_model(run)
+    params = built.init(jax.random.PRNGKey(0))
+
+    n_req, slots = (8, 2) if quick else (16, 4)
+    prompt_len = 16
+    long_new, short_new = (24, 4) if quick else (48, 6)
+    news = _mixed_lengths(n_req, long_new, short_new)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (n_req, prompt_len)).astype(np.int32)
+    useful = sum(news)
+    cache_len = prompt_len + long_new
+
+    # static: arrival-order groups of `slots`, lockstep to the longest
+    t0 = time.perf_counter()
+    eng = Engine(built, params, cache_len=cache_len)
+    static_steps = static_prefills = 0
+    for g0 in range(0, n_req, slots):
+        grp = list(range(g0, min(g0 + slots, n_req)))
+        n_max = max(news[i] for i in grp)
+        eng.generate(prompts[grp], n_max)
+        static_prefills += 1
+        static_steps += n_max
+    static_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    ce = ContinuousEngine(built, params, max_slots=slots,
+                          cache_len=cache_len)
+    results, stats = ce.run([Request(i, prompts[i], news[i])
+                             for i in range(n_req)])
+    cont_s = time.perf_counter() - t0
+    assert stats.useful_tokens == useful and stats.completed == n_req
+
+    row = {
+        "requests": n_req, "slots": slots, "useful_tokens": useful,
+        "static_decode_steps": static_steps,
+        "continuous_decode_steps": stats.decode_steps,
+        "static_tok_per_step": round(useful / static_steps, 3),
+        "continuous_tok_per_step": round(useful / stats.decode_steps, 3),
+        "continuous_win": stats.decode_steps < static_steps,
+        "static_wall_s": round(static_s, 3),
+        "continuous_wall_s": round(cont_s, 3),
+        "mean_ttft_ms": round(
+            1e3 * float(np.mean([r.ttft_s for r in results])), 2),
+        "mean_latency_ms": round(
+            1e3 * float(np.mean([r.latency_s for r in results])), 2),
+    }
+    out(f"{arch},{n_req},{slots},{static_steps},{stats.decode_steps},"
+        f"{row['static_tok_per_step']},{row['continuous_tok_per_step']},"
+        f"{'WIN' if row['continuous_win'] else 'tie'}")
+    return row
+
+
+def _planner_row(name: str, arch: str, limit_gib: float, n_devices: int,
+                 device_preset: Optional[str], prompt_len: int,
+                 decode_len: int, out) -> dict:
+    from repro.configs import DeviceInfo, get_arch
+    from repro.core.api import search_serve
+
+    cfg = get_arch(arch)
+    device = (DeviceInfo.preset(device_preset)
+              if device_preset else None)
+    naive = search_serve(cfg, prompt_len=prompt_len,
+                         decode_len=decode_len, n_devices=1,
+                         memory_limit_gib=limit_gib, device=device,
+                         force_mode="DP", max_slots=64)
+    plan = search_serve(cfg, prompt_len=prompt_len,
+                        decode_len=decode_len, n_devices=n_devices,
+                        memory_limit_gib=limit_gib, device=device)
+    flip = (not naive.feasible) and plan.feasible
+    n_zdp = sum(1 for d in plan.decisions.values()
+                if d.uniform() not in ("DP", None))
+    row = {
+        "model": arch, "limit_gib": limit_gib, "n_devices": n_devices,
+        "device": device_preset or "tpu-v5e",
+        "naive_feasible": naive.feasible,
+        "planned_feasible": plan.feasible,
+        "feasibility_flip": flip,
+        "zdp_ops": n_zdp,
+        "concurrency": plan.max_concurrency,
+        "slots_per_device": plan.slots_per_device,
+        "tpot_ms": round(plan.cost.tpot * 1e3, 3),
+        "ttft_ms": round(plan.cost.ttft * 1e3, 3),
+        "throughput_tok_s": round(plan.cost.throughput, 1),
+        "memory_gib": round(plan.cost.memory / 2**30, 2),
+    }
+    out(f"{name},{arch},{n_devices}dev@{limit_gib:.0f}GiB,"
+        f"naive={'ok' if naive.feasible else 'OOM'},"
+        f"planned={'ok' if plan.feasible else 'OOM'},"
+        f"conc={plan.max_concurrency},"
+        f"{'FLIP' if flip else '-'}")
+    return row
+
+
+def main(out=print, quick: bool = False, check: bool = False,
+         json_path: Optional[Path] = None) -> dict:
+    path = Path(json_path) if json_path else JSON_PATH
+    t0 = time.perf_counter()
+    rows: Dict[str, dict] = {}
+
+    out("arch,requests,slots,static_steps,cont_steps,"
+        "static_tok/step,cont_tok/step,verdict")
+    for arch in ENGINE_ARCHS:
+        rows[f"engine-{arch}"] = _run_engine_row(arch, quick, out)
+
+    out("case,model,fleet,naive,planned,concurrency,flip")
+    rows["plan-llama3-405b"] = _planner_row(
+        "plan-llama3-405b", "llama3-405b", 16.0, 256, None, 512, 128, out)
+    rows["plan-dbrx-132b"] = _planner_row(
+        "plan-dbrx-132b", "dbrx-132b", 80.0, 8, "a100-80g", 512, 128, out)
+    rows["plan-qwen1.5-0.5b"] = _planner_row(
+        "plan-qwen1.5-0.5b", "qwen1.5-0.5b", 4.0, 1, None, 128, 64, out)
+    elapsed = time.perf_counter() - t0
+
+    wins = sum(1 for r in rows.values() if r.get("continuous_win"))
+    flips = sum(1 for r in rows.values() if r.get("feasibility_flip"))
+    out(f"# {len(rows)} rows, {wins} continuous wins, {flips} "
+        f"feasibility flips, {elapsed:.1f}s")
+
+    doc = {"schema": 1}
+    if path.exists():
+        doc = json.loads(path.read_text())
+    doc["serving"] = {"rows": rows, "engine_wins": wins,
+                      "feasibility_flips": flips, "quick": quick,
+                      "seconds": round(elapsed, 3)}
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    out(f"# wrote {path}")
+
+    if check:
+        if wins < 3:
+            raise SystemExit(
+                f"continuous batching won only {wins} engine rows (< 3)")
+        if flips < 1:
+            raise SystemExit("no serving feasibility flip")
+        if elapsed > CEILING_S:
+            raise SystemExit(
+                f"run took {elapsed:.1f}s (ceiling {CEILING_S:.0f}s)")
+        out("# check passed: >= 3 continuous wins, >= 1 flip, "
+            "within ceiling")
+    return doc
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI subset (smaller request sets)")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the headline claims and the ceiling")
+    ap.add_argument("--json", type=Path, default=None,
+                    help=f"output path (default {JSON_PATH})")
+    a = ap.parse_args()
+    main(quick=a.quick, check=a.check, json_path=a.json)

@@ -1,20 +1,19 @@
-"""Batched serving example: prefill + decode with KV / SSM caches.
+"""Batched serving example: static vs continuous batching.
 
 Serves three reduced-architecture families (dense GQA, pure-SSM
-mamba2, hybrid hymba) with batched requests, greedy decoding, and a
-decode-vs-prefill consistency probe.
+mamba2, hybrid hymba): first the legacy static batch engine, then the
+same mixed-length request set through the continuous-batching engine
+(request queue, slot KV cache, per-slot decode positions).
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
-import dataclasses
-
 import jax
 import numpy as np
 
 from repro.configs import (MeshConfig, OSDPConfig, RunConfig, get_arch,
                            get_shape, reduced)
 from repro.models.registry import build_model
-from repro.serving.engine import Engine
+from repro.serving.engine import ContinuousEngine, Engine, Request
 
 for arch in ("qwen1.5-0.5b", "mamba2-2.7b", "hymba-1.5b"):
     cfg = reduced(get_arch(arch))
@@ -27,6 +26,19 @@ for arch in ("qwen1.5-0.5b", "mamba2-2.7b", "hymba-1.5b"):
     prompts = np.random.default_rng(0).integers(
         0, cfg.vocab_size, (4, 48)).astype(np.int32)
     res = eng.generate(prompts, 24)
-    print(f"{arch:14s} [{cfg.family:6s}] prefill {res.prefill_s:.2f}s | "
-          f"decode {res.tokens_per_s:6.1f} tok/s | "
-          f"sample: {res.tokens[0][:8]}")
+    print(f"{arch:14s} [{cfg.family:6s}] static: prefill "
+          f"{res.prefill_s:.2f}s | decode {res.tokens_per_s:6.1f} tok/s "
+          f"| sample: {res.tokens[0][:8]}")
+
+    # continuous: 8 mixed-length requests through 4 slots — short
+    # requests finish early and free their slot for the queue
+    ce = ContinuousEngine(built, params, max_slots=4, cache_len=72)
+    news = [24 if i % 4 == 0 else 6 for i in range(8)]
+    reqs = [Request(i, np.random.default_rng(i).integers(
+        0, cfg.vocab_size, 48).astype(np.int32), news[i])
+        for i in range(8)]
+    results, stats = ce.run(reqs)
+    print(f"{'':14s} continuous: {stats.completed} requests, "
+          f"{stats.useful_tokens} tokens in {stats.decode_steps} decode "
+          f"steps ({stats.tokens_per_s:6.1f} tok/s, utilization "
+          f"{stats.slot_utilization:.0%})")

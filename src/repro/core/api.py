@@ -19,10 +19,11 @@ from repro.configs.base import (DeviceInfo, MeshConfig, ModelConfig,
                                 OSDPConfig, RunConfig, ShapeConfig,
                                 SINGLE_POD_MESH)
 from repro.core.cost_model import (CostEnv, Decision, PlanCost,
-                                   PlanEvaluator)
+                                   PlanEvaluator, ServingWorkload)
 from repro.core.descriptions import ModelDescription, describe
 from repro.core.hybrid import Factorization, HybridPlan
 from repro.core.plan import Plan, make_plan
+from repro.core.search import ServePlan
 from repro.core import search as _search
 
 
@@ -132,6 +133,57 @@ def search_hybrid(model: Union[ModelConfig, ModelDescription],
         batch_candidates=batch_candidates, micro=micro,
         candidates=candidates, max_tp=max_tp, max_pp=max_pp,
         cluster=cluster)
+
+
+def search_serve(model: ModelConfig,
+                 *,
+                 prompt_len: int = 512,
+                 decode_len: int = 128,
+                 mesh: Optional[MeshConfig] = None,
+                 n_devices: int = 1,
+                 memory_limit_gib: float = 16.0,
+                 device: Optional[DeviceInfo] = None,
+                 search: str = "dfs",
+                 operator_splitting: bool = True,
+                 slice_granularity: int = 4,
+                 force_mode: Optional[str] = None,
+                 max_slots: int = 512,
+                 slot_candidates: Optional[Sequence[int]] = None,
+                 cluster: Optional[ClusterSpec] = None) -> ServePlan:
+    """Search the optimal serving configuration (inference OSDP).
+
+    Same §3.1 trade as training — memory vs utilization per operator
+    under the device budget — on the inference workload: the per-op
+    KV/SSM caches of every admitted sequence are the dominant memory
+    term, so the search jointly picks the per-slice sharding AND the
+    max-concurrency admission limit that the continuous-batching
+    engine (`repro.serving.engine.ContinuousEngine`) enforces.  The
+    plan is scored at both phase shapes: the compute-bound prefill
+    (batch x prompt_len) and the bandwidth-bound decode (batch x 1,
+    floored by streaming weights + live caches from HBM).
+
+    `mesh` defaults to an (n_devices, 1) data mesh (or the cluster's);
+    `force_mode="DP"` reproduces the unplanned replicated engine,
+    `force_mode="ZDP"` weight-sharded serving without the search.
+    """
+    if mesh is None:
+        mesh = (cluster.mesh_config() if cluster is not None
+                else MeshConfig((n_devices, 1), ("data", "model")))
+    cfg = OSDPConfig(
+        enabled=True,
+        memory_limit_bytes=memory_limit_gib * 2**30,
+        search=search,
+        operator_splitting=operator_splitting,
+        default_slice_granularity=slice_granularity,
+        checkpointing=False,
+        force_mode=force_mode,
+    )
+    env = CostEnv(device or (cluster.device if cluster is not None
+                             else DeviceInfo()),
+                  mesh, checkpointing=False, train=False, cluster=cluster)
+    return _search.search_serve(
+        model, ServingWorkload(prompt_len, decode_len), env, cfg,
+        max_slots=max_slots, slot_candidates=slot_candidates)
 
 
 def evaluate_plan(model: Union[ModelConfig, ModelDescription],

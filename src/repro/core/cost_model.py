@@ -801,9 +801,11 @@ def zdp_saving(op: OperatorDesc, env: CostEnv, mode: str = ZDP,
                split: int = 1) -> float:
     """Net memory bytes saved by moving op from DP to `mode` at slice
     granularity `split`: sharded model states minus the transiently
-    gathered per-layer slice (paper M_extra; shrinks with splitting)."""
+    gathered per-layer slice (paper M_extra; shrinks with splitting).
+    Serving envs (train=False) hold only the bf16 weights, so the
+    sharding saving is 8x smaller than the optimizer-state saving."""
     n = shard_ways(mode, env)
-    s = op.state_bytes / env.n_tp
+    s = (op.state_bytes if env.train else op.param_bytes) / env.n_tp
     gathered = op.param_bytes / env.n_tp / (max(1, op.layers) * max(1, split))
     return max(0.0, s * (1 - 1 / n) - gathered)
 
@@ -850,3 +852,156 @@ def remat_compute_slope(op: OperatorDesc, env: CostEnv, seq_len: int,
     if env.train:
         comp *= 3.0
     return 0.30 * comp
+
+
+# ---------------------------------------------------------------------------
+# Serving workload model: prefill/decode asymmetry + the KV-cache budget
+# ---------------------------------------------------------------------------
+#
+# Inference is the same §3.1 trade — memory vs hardware utilization per
+# operator under a device budget — with two twists the training model
+# cannot see:
+#
+#   * the dominant memory term is the per-sequence KV/SSM cache
+#     (OperatorDesc.kv_cache_bytes_per_token / cache_bytes_per_seq),
+#     which scales with the *admitted concurrency*, not the batch of one
+#     step — so the planner trades sharded weights against cache slots;
+#   * the two phases price differently: prefill is compute-bound
+#     (batch x prompt_len tokens amortize every gather), decode is
+#     bandwidth-bound (batch x 1 token must still stream the full
+#     weight set + all live caches from HBM every step).
+#
+# `serving_plan_cost` therefore evaluates one plan at BOTH shapes and
+# adds an HBM-roofline floor to each phase's compute term; the
+# prefill/decode formulas live in docs/cost_model.md §8.
+
+@dataclass(frozen=True)
+class ServingWorkload:
+    """Steady-state serving traffic: requests arrive with
+    `prompt_len`-token prompts and decode `decode_len` tokens, so an
+    admitted sequence pins a cache of `cache_len` attended tokens."""
+
+    prompt_len: int = 512
+    decode_len: int = 128
+
+    def __post_init__(self):
+        if self.prompt_len < 1 or self.decode_len < 1:
+            raise ValueError("workload needs prompt_len/decode_len >= 1")
+
+    @property
+    def cache_len(self) -> int:
+        return self.prompt_len + self.decode_len
+
+
+@dataclass
+class ServingCost:
+    """One plan's serving economics at a fixed per-device concurrency."""
+
+    weight_memory: float       # per-device plan-sharded weights (+M_extra)
+    cache_bytes_per_seq: float  # per-device cache one sequence pins
+    slots_per_device: int      # admitted concurrency per device
+    concurrency: int           # global in-flight requests (slots x n_data)
+    memory: float              # steady per-device bytes, caches included
+    prefill_time: float        # one admitted request's prefill (batch 1)
+    decode_step_time: float    # one decode step at full concurrency
+    ttft: float                # time to first token ~= prefill_time
+    tpot: float                # inter-token latency ~= decode_step_time
+    request_latency: float     # ttft + decode_len * tpot
+    throughput: float          # steady-state output tokens/s, global
+
+
+def plan_weight_bytes(desc: ModelDescription,
+                      decisions: Dict[str, Decision],
+                      env: CostEnv) -> float:
+    """Per-device bytes the plan's sharded model states occupy
+    (batch-independent: op_cost at zero tokens)."""
+    total = 0.0
+    for op in desc.operators:
+        dec = decisions.get(op.name) or Decision(op.name, (DP,))
+        total += op_cost(op, dec, 0, 1, env).memory
+    return total
+
+
+def inference_act_bytes(desc: ModelDescription, env: CostEnv,
+                        batch_per_device: int, seq_len: int) -> float:
+    """Live activation bytes of one inference forward pass.
+
+    No backward pass retains anything: the layer scan holds the
+    residual stream plus ONE layer's working set (the widest op's),
+    and the head materializes last-position fp32 logits.  This is the
+    serving analogue of the training act term, which counts every
+    layer's activations."""
+    tokens = batch_per_device * seq_len
+    tp = env.n_tp
+    per_layer = max((op.act_bytes_per_token / max(1, op.layers)
+                     for op in desc.operators), default=0.0)
+    residual = desc.model.d_model * ACT_BYTES * tokens
+    logits = desc.model.padded_vocab * 4.0 * batch_per_device
+    return (residual + per_layer * tokens) / tp + logits
+
+
+def weight_read_bytes(desc: ModelDescription, env: CostEnv) -> float:
+    """HBM bytes of weights one forward step streams per device.
+
+    Matmul ops read their full (per-TP-shard) weights; MoE experts are
+    read at the top-k/E active fraction — recovered exactly from the
+    flops/param ratio (a matmul's flops_per_token is 2 x params, so the
+    ratio is the active fraction); param-less and zero-flop ops stream
+    nothing that scales with the model."""
+    total = 0.0
+    for op in desc.operators:
+        if op.param_count <= 0 or op.flops_per_token <= 0:
+            continue
+        frac = min(1.0, op.flops_per_token / (2.0 * op.param_count))
+        total += frac * op.param_bytes
+    return total / env.n_tp
+
+
+def serving_plan_cost(desc_prefill: ModelDescription,
+                      desc_decode: ModelDescription,
+                      decisions: Dict[str, Decision],
+                      workload: ServingWorkload, env: CostEnv,
+                      slots_per_device: int) -> ServingCost:
+    """Score one sharding plan for serving at a fixed concurrency.
+
+    `desc_prefill` / `desc_decode` describe the same model at the two
+    phase shapes (seq_len = prompt_len and 1); `env` must be a serving
+    env (train=False: one forward gather per ZDP run, no grad sync).
+    Prefill runs one request per device (continuous batching admits
+    requests one at a time); decode runs all `slots_per_device` slots.
+    Each phase's compute is floored by its HBM streaming time:
+    weights for both, plus every live cache for decode.  Memory is
+    weights + caches + the worst phase's live activations
+    (`inference_act_bytes` — inference keeps nothing for a backward
+    pass, so the training act term does not apply)."""
+    if env.train:
+        raise ValueError("serving_plan_cost needs a train=False CostEnv")
+    n = env.n_data
+    slots = max(1, slots_per_device)
+    cache_seq = desc_decode.cache_bytes_per_seq(workload.cache_len,
+                                                env.n_tp)
+    dec = plan_cost(desc_decode, decisions, slots * n, env)
+    pre = plan_cost(desc_prefill, decisions, n, env)
+    bw = env.device.hbm_bw
+    reads = weight_read_bytes(desc_decode, env)
+    decode_step = (max(dec.compute_time, (reads + slots * cache_seq) / bw)
+                   + dec.comm_time)
+    prefill = max(pre.compute_time, reads / bw) + pre.comm_time
+    latency = prefill + workload.decode_len * decode_step
+    weight_mem = plan_weight_bytes(desc_decode, decisions, env)
+    act = max(inference_act_bytes(desc_prefill, env, 1,
+                                  workload.prompt_len),
+              inference_act_bytes(desc_decode, env, slots, 1))
+    return ServingCost(
+        weight_memory=weight_mem,
+        cache_bytes_per_seq=cache_seq,
+        slots_per_device=slots,
+        concurrency=slots * n,
+        memory=weight_mem + act + slots * cache_seq,
+        prefill_time=prefill,
+        decode_step_time=decode_step,
+        ttft=prefill,
+        tpot=decode_step,
+        request_latency=latency,
+        throughput=(slots * n * workload.decode_len / latency
+                    if latency > 0 else 0.0))

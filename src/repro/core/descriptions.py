@@ -27,6 +27,13 @@ BYTES_PER_PARAM = 2          # bf16 working copy
 STATE_BYTES_PER_PARAM = 16
 ACT_BYTES = 2                # bf16 activations
 
+# serving-cache layout constants (must match the runtime caches:
+# models.attention.init_kv_cache / models.ssm.init_ssm_cache — the
+# agreement is asserted against jax.eval_shape by tests/test_serving.py)
+KV_POS_BYTES = 4             # int32 absolute-position tag per cache slot
+SSM_STATE_BYTES = 4          # fp32 SSD recurrent state
+SSM_CONV_K = 4               # depthwise-conv width (models.ssm.CONV_K)
+
 
 @dataclass(frozen=True)
 class OperatorDesc:
@@ -47,6 +54,17 @@ class OperatorDesc:
     # activations stay live.  None -> `layers` (the legacy global-flag
     # scaling, which divides by the op's own stack depth).
     remat_layers: Optional[int] = None
+    # --- serving-cache terms (inference workloads only) ---------------------
+    # Decode-time cache bytes this op pins per *admitted sequence*: the
+    # token-scaled part (KV cache: grows with the attended context, so
+    # it is capped by a sliding window) and the fixed part (SSM/conv
+    # recurrent state: O(1) in sequence length).  Both are per layer
+    # instance x `layers`, matching the other per-group terms.
+    kv_cache_bytes_per_token: float = 0.0
+    cache_bytes_per_seq: float = 0.0
+    # whether the runtime shards this op's cache over the TP axis
+    # (SSD heads are model-sharded; GQA KV heads are replicated)
+    cache_tp_sharded: bool = False
     # memory of the transiently *gathered* weight in ZDP mode (the §3.3
     # "gigantic tensor" peak); defaults to the full param bytes.
 
@@ -85,6 +103,30 @@ class ModelDescription:
     def decidable(self) -> List[OperatorDesc]:
         return [op for op in self.operators if op.decidable]
 
+    def cache_bytes_per_seq(self, cache_len: int, tp: int = 1,
+                            kv_dtype_bytes: int = ACT_BYTES) -> float:
+        """Per-device cache bytes ONE admitted sequence pins when its
+        attended context is `cache_len` tokens: the KV term scales with
+        the context (capped by the arch's sliding window, matching the
+        runtime's rolling cache), the SSM state term is O(1).  `tp`
+        divides the model-sharded caches (SSD heads); GQA KV heads are
+        replicated over the model axis, so the KV term never shrinks.
+        `kv_dtype_bytes` rescales the k/v entries for non-bf16 caches
+        (the int32 position tag is dtype-independent)."""
+        win = self.model.sliding_window
+        eff = min(cache_len, win) if win else cache_len
+        total = 0.0
+        for op in self.operators:
+            t = tp if op.cache_tp_sharded else 1
+            kv = op.kv_cache_bytes_per_token
+            if kv and kv_dtype_bytes != ACT_BYTES:
+                # the int32 position tag (one per layer instance in the
+                # group) keeps its size; only the k/v entries rescale
+                pos = KV_POS_BYTES * max(1, op.layers)
+                kv = (kv - pos) / ACT_BYTES * kv_dtype_bytes + pos
+            total += (kv * eff + op.cache_bytes_per_seq) / t
+        return total
+
 
 def _matmul_flops(d_in: int, d_out: int) -> float:
     return 2.0 * d_in * d_out
@@ -105,24 +147,33 @@ def describe(model: ModelConfig, shape: ShapeConfig,
 
     def add(name: str, params: int, flops_tok: float, act_tok: float,
             splittable: bool = False, decidable: bool = True,
-            layers: int = 1, remat_layers: Optional[int] = None) -> None:
+            layers: int = 1, remat_layers: Optional[int] = None,
+            kv_cache_tok: float = 0.0, cache_seq: float = 0.0,
+            cache_tp_sharded: bool = False) -> None:
         ops.append(OperatorDesc(name, params, flops_tok, act_tok,
                                 splittable, decidable, layers,
-                                remat_layers))
+                                remat_layers, kv_cache_tok, cache_seq,
+                                cache_tp_sharded))
 
     def add_layer_group(name: str, params_per_layer: int, flops_tok: float,
                         act_tok: float, splittable: bool = False,
-                        decidable: bool = True) -> None:
+                        decidable: bool = True, kv_cache_tok: float = 0.0,
+                        cache_seq: float = 0.0,
+                        cache_tp_sharded: bool = False) -> None:
         """A group stacked over L layers (or unrolled if per_layer)."""
         if per_layer:
             # each per-layer op gathers its own slice (layers=1) but
             # shares the one-layer-live recompute set with its L peers
             for i in range(L):
                 add(f"layer{i}.{name}", params_per_layer, flops_tok,
-                    act_tok, splittable, decidable, remat_layers=L)
+                    act_tok, splittable, decidable, remat_layers=L,
+                    kv_cache_tok=kv_cache_tok, cache_seq=cache_seq,
+                    cache_tp_sharded=cache_tp_sharded)
         else:
             add(f"layers.{name}", params_per_layer * L, flops_tok * L,
-                act_tok * L, splittable, decidable, layers=L)
+                act_tok * L, splittable, decidable, layers=L,
+                kv_cache_tok=kv_cache_tok * L, cache_seq=cache_seq * L,
+                cache_tp_sharded=cache_tp_sharded)
 
     nm = 2 if model.norm == "layernorm" else 1   # norm scale (+bias)
     # --- embeddings / head --------------------------------------------------
@@ -139,9 +190,12 @@ def describe(model: ModelConfig, shape: ShapeConfig,
     if model.has_attention:
         qd, kvd = model.q_dim, model.kv_dim
         bias = (qd + 2 * kvd) if model.qkv_bias else 0
+        # the op producing K/V owns the KV cache: k + v (bf16) plus the
+        # int32 position tag, per attended token per sequence
         add_layer_group("attn_qkv", d * (qd + 2 * kvd) + bias,
                         _matmul_flops(d, qd + 2 * kvd),
-                        (qd + 2 * kvd) * ACT_BYTES, splittable=True)
+                        (qd + 2 * kvd) * ACT_BYTES, splittable=True,
+                        kv_cache_tok=2 * kvd * ACT_BYTES + KV_POS_BYTES)
         add_layer_group("attn_out", qd * d, _matmul_flops(qd, d),
                         d * ACT_BYTES, splittable=True)
         # score computation: param-less, pure gamma cost.
@@ -162,11 +216,18 @@ def describe(model: ModelConfig, shape: ShapeConfig,
                         in_dim * ACT_BYTES, splittable=True)
         add_layer_group("ssm_out", di * d, _matmul_flops(di, d),
                         d * ACT_BYTES, splittable=True)
-        # A, D, dt_bias, gate norm, depthwise conv (K=4) — tiny
+        # A, D, dt_bias, gate norm, depthwise conv (K=4) — tiny; the SSD
+        # scan op owns the O(1)-per-sequence recurrent cache: the fp32
+        # (nh, hd, ns) state plus the (K-1)-step conv tail, both
+        # model-sharded with the SSD heads at decode time
         add_layer_group("ssm_small", 3 * nh + di + 4 * (di + 2 * ns),
                         2.0 * 2.0 * model.ssm_chunk * di  # ssd chunk scan
                         + 2.0 * di * ns * 2,
-                        di * ACT_BYTES, decidable=False)
+                        di * ACT_BYTES, decidable=False,
+                        cache_seq=(di * ns * SSM_STATE_BYTES
+                                   + (SSM_CONV_K - 1) * (di + 2 * ns)
+                                   * SSM_STATE_BYTES),
+                        cache_tp_sharded=True)
         add_layer_group("ssm_norm", d, 0.0, 0.0, decidable=False)
 
     # --- FFN / MoE ----------------------------------------------------------

@@ -56,16 +56,19 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.configs.base import DeviceInfo, MeshConfig, OSDPConfig
+from repro.configs.base import (DeviceInfo, MeshConfig, ModelConfig,
+                                OSDPConfig, ShapeConfig)
 from repro.cluster.topology import ClusterSpec
 from repro.core.cost_model import (DP, MODES, REMAT_INHERIT, REMAT_OFF,
                                    REMAT_ON, ZDP, ZDP_POD, CostEnv,
                                    Decision, PlanCost, PlanEvaluator,
+                                   ServingCost, ServingWorkload,
                                    plan_cost, remat_act_saving_slope,
                                    remat_compute_slope, remat_gather_time,
+                                   inference_act_bytes, serving_plan_cost,
                                    uniform_plan, zdp_extra_time,
                                    zdp_saving)
-from repro.core.descriptions import ModelDescription, OperatorDesc
+from repro.core.descriptions import ModelDescription, OperatorDesc, describe
 from repro.core.hybrid import (Factorization, HybridPlan, factorizations,
                                hybrid_step_time, pp_boundary_time,
                                slice_description, stage_bounds,
@@ -839,6 +842,192 @@ def _default_batches(max_batch: int, env: CostEnv) -> List[int]:
         out.append(b)
         b += n
     return out or [n]
+
+
+# ---------------------------------------------------------------------------
+# Serving Scheduler: sharding + concurrency under the KV-cache budget
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ServePlan:
+    """A searched serving configuration: per-slice sharding decisions
+    plus the KV-budget admission limit.
+
+    `slots_per_device` is the throughput-argmax concurrency;
+    `max_slots_per_device` is the largest concurrency that still fits
+    the memory limit under the (same-search) plan — the continuous
+    engine's admission limit.  `candidates` records every probed
+    (slots, output tokens/s) pair, the serving analogue of Algorithm
+    1's P set."""
+
+    model_name: str
+    workload: ServingWorkload
+    decisions: Dict[str, Decision]
+    cost: ServingCost
+    slots_per_device: int
+    max_slots_per_device: int
+    max_concurrency: int
+    feasible: bool
+    solver: str
+    search_seconds: float
+    nodes_visited: int = 0
+    candidates: List[Tuple[int, float]] = field(default_factory=list)
+    inner: Optional[SearchResult] = None
+
+    def summary(self) -> str:
+        c = self.cost
+        n_zdp = sum(1 for d in self.decisions.values()
+                    if d.uniform() not in (DP, None))
+        n_mixed = sum(1 for d in self.decisions.values()
+                      if d.uniform() is None)
+        return "\n".join([
+            f"serve-plan[{self.model_name} p{self.workload.prompt_len}"
+            f"+d{self.workload.decode_len}] ops={len(self.decisions)} "
+            f"zdp={n_zdp} mixed={n_mixed} "
+            f"({'feasible' if self.feasible else 'INFEASIBLE'})",
+            f"  concurrency = {c.concurrency} in flight "
+            f"({c.slots_per_device} slots/device, admission limit "
+            f"{self.max_concurrency})",
+            f"  est memory/device = {c.memory / 2**30:.2f} GiB "
+            f"(weights {c.weight_memory / 2**30:.2f}, cache/seq "
+            f"{c.cache_bytes_per_seq / 2**20:.1f} MiB)",
+            f"  est ttft = {c.ttft * 1e3:.2f} ms, tpot = "
+            f"{c.tpot * 1e3:.3f} ms, request latency = "
+            f"{c.request_latency * 1e3:.1f} ms",
+            f"  est throughput = {c.throughput:.0f} output tok/s",
+        ])
+
+
+def search_serve(model: ModelConfig, workload: ServingWorkload,
+                 env: CostEnv, osdp: OSDPConfig, max_slots: int = 512,
+                 slot_candidates: Optional[Sequence[int]] = None
+                 ) -> ServePlan:
+    """Search the serving plan space: per-slice sharding x concurrency.
+
+    The inner problem at a fixed per-device concurrency `s` is exactly
+    the training search with the KV budget folded into the limit — the
+    caches of `s` admitted sequences are mode-independent, so the
+    sharding cover problem runs against `M_limit - s * cache_seq` on
+    the decode-shaped description (the phase whose step time the
+    sharding actually taxes) and reuses the existing solvers and
+    `PlanEvaluator` tables across the whole sweep.  Every probed plan
+    is then re-scored with `serving_plan_cost` (both phases + HBM
+    floors + the cache term), and the sweep keeps the throughput
+    argmax plus the largest feasible concurrency (the admission
+    limit).  Without explicit `slot_candidates` the sweep doubles
+    until infeasible, then bisects the frontier.
+    """
+    t0 = _time.perf_counter()
+    if env.train:
+        raise ValueError("search_serve needs a train=False CostEnv")
+    if env.checkpointing:
+        raise ValueError("serving env must not checkpoint "
+                         "(CostEnv(checkpointing=False)): inference "
+                         "keeps no activations to rematerialize")
+    if osdp.selective_remat:
+        raise ValueError("serving has no backward pass to rematerialize: "
+                         "use checkpointing=False")
+    pre_shape = ShapeConfig("serve_prefill", workload.prompt_len,
+                            env.n_data, "prefill")
+    dec_shape = ShapeConfig("serve_decode", 1, env.n_data, "decode")
+    desc_pre = describe(model, pre_shape)
+    desc_dec = describe(model, dec_shape)
+    limit = env.topo.memory_limit(osdp.memory_limit_bytes)
+    cache_seq = desc_dec.cache_bytes_per_seq(workload.cache_len, env.n_tp)
+
+    ctx = None if osdp.force_mode else _SearchContext(desc_dec, env, osdp)
+    base_limit = ctx.limit if ctx is not None else limit
+    # the evaluator charges the training act term (every layer's
+    # activations x batch); inference holds one layer + the residual
+    # stream (`inference_act_bytes`), so the folded limit swaps one for
+    # the other — per-slot slopes, both linear in the concurrency
+    act_ev_slope = (desc_dec.resident_act_bytes_per_token
+                    + sum(op.act_bytes_per_token
+                          for op in desc_dec.operators)) / env.n_tp
+    nodes = 0
+    evals: Dict[int, Tuple[Dict[str, Decision], Optional[SearchResult],
+                           ServingCost, bool]] = {}
+
+    def probe(slots: int):
+        nonlocal nodes
+        if slots in evals:
+            return evals[slots]
+        if ctx is None:
+            g = (osdp.default_slice_granularity
+                 if osdp.operator_splitting else 1)
+            decisions = uniform_plan(desc_dec, osdp.force_mode, g)
+            res = None
+        else:
+            # fold the KV budget into the limit (caches are
+            # mode-independent, so this is exact) and correct the
+            # training-vs-inference activation gap
+            act_inf = inference_act_bytes(desc_dec, env, slots, 1)
+            ctx.limit = max(0.0, base_limit - slots * cache_seq
+                            - act_inf + act_ev_slope * slots)
+            res = ctx.solve(slots * env.n_data)
+            decisions = res.decisions
+            nodes += res.nodes_visited
+        sc = serving_plan_cost(desc_pre, desc_dec, decisions, workload,
+                               env, slots)
+        ok = sc.memory <= limit
+        evals[slots] = (decisions, res, sc, ok)
+        return evals[slots]
+
+    probed: List[int] = []
+    if slot_candidates is not None:
+        probed = sorted({max(1, int(s)) for s in slot_candidates})
+        for s in probed:
+            probe(s)
+    else:
+        s, last_ok, first_bad = 1, 0, None
+        while s <= max_slots:
+            probed.append(s)
+            if probe(s)[3]:
+                last_ok = s
+            else:
+                first_bad = s
+                break
+            s *= 2
+        if first_bad is None and probed and probed[-1] != max_slots:
+            probed.append(max_slots)
+            if probe(max_slots)[3]:
+                last_ok = max_slots
+            else:
+                first_bad = max_slots
+        if first_bad is not None and last_ok:
+            lo, hi = last_ok, first_bad
+            while hi - lo > 1:          # bisect the admission frontier
+                mid = (lo + hi) // 2
+                probed.append(mid)
+                if probe(mid)[3]:
+                    lo = mid
+                else:
+                    hi = mid
+
+    if ctx is not None:
+        ctx.limit = base_limit
+    feas = [s for s in evals if evals[s][3]]
+    max_feas = max(feas) if feas else 0
+    if feas:
+        best_slots = max(feas, key=lambda s: evals[s][2].throughput)
+        feasible = True
+    else:
+        best_slots = min(evals)     # most-sharded repair plan at slots=1
+        feasible = False
+    decisions, res, sc, _ = evals[best_slots]
+    return ServePlan(
+        model_name=model.name, workload=workload, decisions=decisions,
+        cost=sc, slots_per_device=best_slots if feasible else 0,
+        max_slots_per_device=max_feas,
+        max_concurrency=max_feas * env.n_data,
+        feasible=feasible,
+        solver=(f"forced:{osdp.force_mode}" if osdp.force_mode
+                else osdp.search),
+        search_seconds=_time.perf_counter() - t0,
+        nodes_visited=nodes,
+        candidates=sorted((s, evals[s][2].throughput if evals[s][3]
+                           else 0.0) for s in evals),
+        inner=res)
 
 
 # ---------------------------------------------------------------------------

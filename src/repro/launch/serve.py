@@ -1,8 +1,16 @@
-"""Serving launcher: prefill a batch of synthetic prompts, decode N
-tokens with the KV/SSM cache engine.
+"""Serving launcher: OSDP-planned continuous batching.
+
+Default path: run the serving search (`repro.core.api.search_serve`)
+for the target device / fleet, print the plan (sharding decisions +
+KV-budget admission limit), build the model with the plan's decisions,
+and serve a synthetic request stream through the continuous-batching
+engine.  `--no-plan` restores the legacy path — a hardcoded (1,1)
+mesh with OSDP disabled and the static batch engine.
 
     python -m repro.launch.serve --arch mamba2-2.7b --reduced \
-        --prompt-len 64 --new-tokens 32 --batch 4
+        --prompt-len 64 --new-tokens 32 --requests 8
+    python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
+        --no-plan --batch 4 --prompt-len 64 --new-tokens 32
 """
 from __future__ import annotations
 
@@ -12,21 +20,43 @@ import sys
 import jax
 import numpy as np
 
-from repro.configs import (MeshConfig, OSDPConfig, RunConfig, get_arch,
-                           get_shape, reduced)
+from repro.configs import (DeviceInfo, MeshConfig, OSDPConfig, RunConfig,
+                           get_arch, get_shape, reduced)
+from repro.core.api import search_serve
 from repro.models.registry import build_model
-from repro.serving.engine import Engine
+from repro.serving.engine import ContinuousEngine, Engine, Request
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="static batch size (legacy / --engine static)")
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    # --- planning ----------------------------------------------------------
+    ap.add_argument("--no-plan", action="store_true",
+                    help="legacy path: (1,1) mesh, OSDP disabled, "
+                         "static batching")
+    ap.add_argument("--device", default=None, metavar="PRESET",
+                    help="DeviceInfo preset to plan for "
+                         "(tpu-v5e, tpu-v4, a100-80g, h100-sxm)")
+    ap.add_argument("--n-devices", type=int, default=1,
+                    help="data extent the plan targets")
+    ap.add_argument("--memory-limit-gib", type=float, default=16.0)
+    ap.add_argument("--max-slots", type=int, default=0,
+                    help="cap the admission limit (0 = searched)")
+    # --- workload ----------------------------------------------------------
+    ap.add_argument("--engine", choices=("continuous", "static"),
+                    default="continuous")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="synthetic requests to serve (0 = 2x batch)")
+    ap.add_argument("--mixed", action="store_true",
+                    help="mixed decode lengths (every 4th request "
+                         "decodes the full --new-tokens, the rest 1/4)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -35,13 +65,74 @@ def main(argv=None) -> int:
     if not cfg.is_decoder:
         print(f"{cfg.name} is encoder-only; nothing to decode")
         return 1
+
+    rng = np.random.default_rng(args.seed)
+    if args.no_plan:
+        return _serve_static(cfg, args, rng, plan=None)
+
+    device = DeviceInfo.preset(args.device) if args.device else None
+    plan = search_serve(
+        cfg, prompt_len=args.prompt_len, decode_len=args.new_tokens,
+        n_devices=args.n_devices,
+        memory_limit_gib=args.memory_limit_gib, device=device)
+    print(plan.summary())
+    if not plan.feasible:
+        print("plan infeasible: no concurrency fits the memory limit "
+              "(shrink the workload or add devices)")
+        return 2
+    if args.engine == "static":
+        return _serve_static(cfg, args, rng, plan=plan)
+
+    n_req = args.requests or 2 * args.batch
+    slots = plan.max_slots_per_device
+    if args.max_slots:
+        slots = min(slots, args.max_slots)
+    slots = max(1, min(slots, n_req))
     run = RunConfig(model=cfg, shape=get_shape("decode_32k"),
                     mesh=MeshConfig((1, 1), ("data", "model")),
-                    osdp=OSDPConfig(enabled=False))
-    built = build_model(run)
+                    osdp=OSDPConfig(
+                        enabled=True, checkpointing=False,
+                        memory_limit_bytes=args.memory_limit_gib * 2**30))
+    built = build_model(run, plan)
     params = built.init(jax.random.PRNGKey(args.seed))
-    eng = Engine(built, params, temperature=args.temperature)
-    rng = np.random.default_rng(args.seed)
+    eng = ContinuousEngine(built, params, max_slots=slots,
+                           cache_len=args.prompt_len + args.new_tokens,
+                           temperature=args.temperature)
+    reqs = []
+    for i in range(n_req):
+        n_new = args.new_tokens
+        if args.mixed and i % 4 != 0:
+            n_new = max(1, args.new_tokens // 4)
+        prompt = rng.integers(0, cfg.vocab_size,
+                              args.prompt_len).astype(np.int32)
+        reqs.append(Request(i, prompt, n_new))
+    results, stats = eng.run(reqs, seed=args.seed)
+    print(f"served {stats.completed} requests "
+          f"({stats.useful_tokens} tokens) in {stats.wall_s:.2f}s: "
+          f"{stats.tokens_per_s:.1f} tok/s, {stats.prefill_steps} "
+          f"prefills + {stats.decode_steps} decode steps on {slots} "
+          f"slots (utilization {stats.slot_utilization:.0%})")
+    for r in results[:3]:
+        print(f"  req {r.rid}: {r.n_generated} tokens, queue "
+              f"{r.queue_wait_s * 1e3:.0f} ms, ttft "
+              f"{r.ttft_s * 1e3:.0f} ms, latency "
+              f"{r.latency_s * 1e3:.0f} ms")
+    return 0
+
+
+def _serve_static(cfg, args, rng, plan=None) -> int:
+    """The pre-plan engine: one batch, lockstep decode."""
+    run = RunConfig(model=cfg, shape=get_shape("decode_32k"),
+                    mesh=MeshConfig((1, 1), ("data", "model")),
+                    osdp=(OSDPConfig(enabled=True, checkpointing=False)
+                          if plan is not None
+                          else OSDPConfig(enabled=False)))
+    built = build_model(run, plan)
+    params = built.init(jax.random.PRNGKey(args.seed))
+    cache_len = (args.prompt_len + args.new_tokens
+                 if plan is not None else None)
+    eng = Engine(built, params, temperature=args.temperature,
+                 cache_len=cache_len)
     prompts = rng.integers(0, cfg.vocab_size,
                            (args.batch, args.prompt_len)).astype(np.int32)
     res = eng.generate(prompts, args.new_tokens, seed=args.seed)

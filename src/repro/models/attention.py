@@ -184,25 +184,29 @@ def attn_decode(cfg: ModelConfig, geom: AttnGeom, pset: ParamSet,
                 window: int = 0,
                 positions3: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """One-token decode. x: (B,1,d); t: scalar step index; cache holds
-    this layer's slices {k:(B,Sc,KV,hd), v:..., pos:(B,Sc)}."""
+    """One-token decode. x: (B,1,d); t: step index — a scalar (whole
+    batch in lockstep) or a (B,) vector (continuous batching: each
+    sequence at its own position); cache holds this layer's slices
+    {k:(B,Sc,KV,hd), v:..., pos:(B,Sc)}."""
     B = x.shape[0]
     Sc = cache["k"].shape[1]
     q, k, v = _proj_qkv(cfg, geom, pset, lp, x)
+    t_vec = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
     if cfg.rope == "mrope":
         pos_arg = positions3                       # (B,1,3)
     else:
-        pos_arg = jnp.broadcast_to(t, (B, 1)).astype(jnp.int32)
+        pos_arg = t_vec[:, None]                   # (B,1)
     if cfg.rope != "none":
         q = rotate(cfg, q.reshape(B, 1, -1, geom.head_dim), pos_arg
                    ).reshape(q.shape)
         k = rotate(cfg, k, pos_arg)
-    slot = jnp.where(Sc > 0, t % Sc, 0).astype(jnp.int32)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
-    pos_new = jnp.broadcast_to(t, (B, 1)).astype(jnp.int32)
-    pos_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache["pos"], pos_new, slot, axis=1)
+    # per-sequence ring-buffer slot: a scatter row-by-row (identical to
+    # the old dynamic_update_slice when every t is equal)
+    slot = jnp.where(Sc > 0, t_vec % Sc, 0).astype(jnp.int32)
+    bidx = jnp.arange(B)
+    k_cache = cache["k"].at[bidx, slot].set(k[:, 0])
+    v_cache = cache["v"].at[bidx, slot].set(v[:, 0])
+    pos_cache = cache["pos"].at[bidx, slot].set(t_vec)
 
     # single-row softmax over the cache (scores are (B,KV,Gp,1,Sc) — small)
     s = jnp.einsum("bqkgh,btkh->bkgqt", q, k_cache,
@@ -210,8 +214,8 @@ def attn_decode(cfg: ModelConfig, geom: AttnGeom, pset: ParamSet,
     s = s / math.sqrt(geom.head_dim)
     valid = pos_cache >= 0
     if window:
-        valid = valid & (t - pos_cache < window)
-    valid = valid & (pos_cache <= t)
+        valid = valid & (t_vec[:, None] - pos_cache < window)
+    valid = valid & (pos_cache <= t_vec[:, None])
     s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqt,btkh->bqkgh", p, v_cache.astype(jnp.float32)

@@ -357,7 +357,9 @@ class Model:
                     caches: Dict[str, Any], tokens: jax.Array, t: jax.Array,
                     positions3: Optional[jax.Array] = None
                     ) -> Tuple[jax.Array, Dict[str, Any]]:
-        """One token for the whole batch. tokens: (B,1) int32."""
+        """One token for the whole batch. tokens: (B,1) int32; t is a
+        scalar position or a (B,) vector (continuous batching decodes
+        every slot at its own position)."""
         cfg = self.cfg
         x = jnp.take(params["embed/tok"], tokens, axis=0)
         layer_params = self._layer_params(params)
@@ -412,17 +414,22 @@ class Model:
         return logits, new_caches
 
     def prefill(self, params: Dict[str, jax.Array],
-                batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict]:
+                batch: Dict[str, jax.Array],
+                cache_len: Optional[int] = None) -> Tuple[jax.Array, Dict]:
         """Full-sequence forward returning last-position logits + caches.
 
         Caches are rebuilt from a forward pass that also emits per-layer
-        k/v (attention) and final states (ssm)."""
+        k/v (attention) and final states (ssm).  `cache_len` sizes the
+        returned KV cache (>= S leaves free slots for decode — the
+        continuous engine prefills straight into its slot shape);
+        default S, the legacy rolling-cache behaviour."""
         cfg = self.cfg
         x = self.embed(params, batch)
         B, S = x.shape[:2]
         positions = positions_for(cfg, batch, S)
         win = self.swa_window or cfg.sliding_window
-        alen = min(S, win) if win else S
+        target = cache_len or S
+        alen = min(target, win) if win else target
         layer_params = self._layer_params(params)
 
         def body(carry, lp):

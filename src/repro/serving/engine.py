@@ -1,26 +1,51 @@
-"""Batched serving engine: prefill + decode over the OSDP-sharded model.
+"""Serving engines: static batching and continuous batching.
 
-`make_serve_step(built, cache_len)` returns the jit'd one-token decode
-used by the decode dry-run shapes; `Engine` is the host-side loop that
-serves batched requests (prefill once, decode N tokens, greedy or
-temperature sampling) for the examples and tests.
+`make_serve_step(built)` returns the jit'd one-token decode used by the
+decode dry-run shapes; `Engine` is the legacy static-batch loop
+(prefill once, decode N tokens for everyone, no admission).
+
+`ContinuousEngine` is the production loop the OSDP serving search
+plans for (`repro.core.api.search_serve`):
+
+  * a FIFO **request queue** feeds a fixed set of **slots** — the
+    KV/SSM cache is allocated once at ``(max_slots, cache_len)`` and
+    never reshaped;
+  * **admission** is bounded by the searched KV budget: a request is
+    admitted only when a slot is free (``max_slots`` comes from
+    ``ServePlan.max_slots_per_device``);
+  * **prefill/decode interleaving**: each engine iteration first
+    prefills one queued request per free slot (batch 1, written into
+    the slot with a donated ``dynamic_update_slice``), then decodes
+    every live slot one token with a per-slot position vector —
+    sequences at different depths share one batched decode step;
+  * per-request **latency stats** (queue wait, TTFT, per-token rate,
+    completion) are recorded on the host clock, plus a deterministic
+    engine-step clock for benchmarks.
+
+Slots whose request finished keep decoding garbage until re-admission
+overwrites their cache — their outputs are ignored, and the admission
+prefill rewrites every cache leaf of the slot, so no masking state is
+needed on the device.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import RunConfig
 from repro.models.registry import Built
 
 
 def make_serve_step(built: Built) -> Callable:
-    """jit'd (params, caches, tokens, t[, positions3]) -> (logits, caches)."""
+    """jit'd (params, caches, tokens, t[, positions3]) -> (logits, caches).
+
+    `t` may be a scalar (lockstep batch) or a (B,) vector (continuous
+    batching: every slot decodes at its own position)."""
     model = built.model
 
     def serve_step(params, caches, tokens, t, positions3=None):
@@ -30,14 +55,29 @@ def make_serve_step(built: Built) -> Callable:
     return jax.jit(serve_step, donate_argnums=(1,))
 
 
-def make_prefill_step(built: Built) -> Callable:
+def make_prefill_step(built: Built,
+                      cache_len: Optional[int] = None) -> Callable:
+    """jit'd prefill; `cache_len` sizes the emitted KV cache (free
+    slots after the prompt let decode append instead of rolling)."""
     model = built.model
 
     def prefill_step(params, batch):
-        return model.prefill(params, batch)
+        return model.prefill(params, batch, cache_len=cache_len)
 
     return jax.jit(prefill_step)
 
+
+def _sample(cfg, logits: jax.Array, key, temperature: float) -> jax.Array:
+    logits = logits[..., :cfg.vocab_size].astype(jnp.float32)
+    if temperature <= 0:
+        return jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    return jax.random.categorical(
+        key, logits / temperature, -1).astype(jnp.int32)[:, None]
+
+
+# ---------------------------------------------------------------------------
+# static batching (legacy engine)
+# ---------------------------------------------------------------------------
 
 @dataclass
 class GenerationResult:
@@ -49,14 +89,20 @@ class GenerationResult:
 
 @dataclass
 class Engine:
+    """Static batching: one prefill, then every sequence decodes the
+    same number of tokens in lockstep.  `cache_len` (>= prompt length)
+    sizes the KV cache; default keeps the legacy prompt-length rolling
+    cache."""
+
     built: Built
     params: Dict[str, jax.Array]
     temperature: float = 0.0
+    cache_len: Optional[int] = None
     _prefill: Callable = field(init=False)
     _decode: Callable = field(init=False)
 
     def __post_init__(self):
-        self._prefill = make_prefill_step(self.built)
+        self._prefill = make_prefill_step(self.built, self.cache_len)
         self._decode = make_serve_step(self.built)
 
     def generate(self, prompts: np.ndarray, n_new: int,
@@ -87,9 +133,214 @@ class Engine:
             B * n_new / max(t2 - t1, 1e-9))
 
     def _sample(self, logits: jax.Array, key) -> jax.Array:
+        return _sample(self.built.model.cfg, logits, key, self.temperature)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Request:
+    """One serving request: a prompt and a decode budget."""
+
+    rid: int
+    prompt: np.ndarray            # (S,) int32 token ids
+    max_new_tokens: int
+
+    def __post_init__(self):
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        p = np.asarray(self.prompt)
+        if p.ndim != 1 or p.size < 1:
+            raise ValueError("prompt must be a non-empty 1-D token array")
+
+
+@dataclass
+class RequestResult:
+    """Per-request output + latency accounting (host-clock seconds
+    relative to `ContinuousEngine.run`'s start, plus the deterministic
+    engine-step clock)."""
+
+    rid: int
+    prompt_len: int
+    tokens: np.ndarray            # (n_generated,) int32
+    t_enqueued: float
+    t_admitted: float
+    t_first_token: float
+    t_finished: float
+    admitted_at_step: int
+    finished_at_step: int
+
+    @property
+    def n_generated(self) -> int:
+        return int(len(self.tokens))
+
+    @property
+    def queue_wait_s(self) -> float:
+        return self.t_admitted - self.t_enqueued
+
+    @property
+    def ttft_s(self) -> float:
+        """Time to first token, queue wait included."""
+        return self.t_first_token - self.t_enqueued
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_finished - self.t_enqueued
+
+
+@dataclass
+class ServeStats:
+    """Aggregate engine counters for one `run`."""
+
+    wall_s: float
+    prefill_steps: int
+    decode_steps: int
+    slots: int
+    useful_tokens: int
+    completed: int
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.useful_tokens / max(self.wall_s, 1e-9)
+
+    @property
+    def slot_utilization(self) -> float:
+        """Useful decoded tokens / decoded slot-steps: 1.0 means no
+        slot ever decoded a finished or empty sequence."""
+        produced = self.decode_steps * self.slots
+        # the admission prefill also produces one token per request
+        return ((self.useful_tokens - self.prefill_steps)
+                / max(produced, 1))
+
+
+class ContinuousEngine:
+    """Continuous batching over a fixed slot pool (see module docs)."""
+
+    def __init__(self, built: Built, params: Dict[str, jax.Array],
+                 max_slots: int, cache_len: int,
+                 temperature: float = 0.0):
+        cfg = built.model.cfg
+        assert cfg.is_decoder, "encoder-only models cannot decode"
+        if max_slots < 1 or cache_len < 1:
+            raise ValueError("need max_slots >= 1 and cache_len >= 1")
+        self.built = built
+        self.params = params
+        self.max_slots = int(max_slots)
+        self.cache_len = int(cache_len)
+        self.temperature = float(temperature)
+        self._prefill = make_prefill_step(built, self.cache_len)
+        self._decode = make_serve_step(built)
+
+        def insert(caches, one, slot):
+            return jax.tree_util.tree_map(
+                lambda big, new: jax.lax.dynamic_update_slice_in_dim(
+                    big, new.astype(big.dtype), slot, axis=1),
+                caches, one)
+
+        self._insert = jax.jit(insert, donate_argnums=(0,))
+
+    def _mrope_positions(self, t_vec: np.ndarray) -> Optional[jax.Array]:
+        if self.built.model.cfg.rope != "mrope":
+            return None
+        return jnp.broadcast_to(
+            jnp.asarray(t_vec, jnp.int32)[:, None, None],
+            (len(t_vec), 1, 3))
+
+    def run(self, requests: Sequence[Request], seed: int = 0
+            ) -> Tuple[List[RequestResult], ServeStats]:
+        """Serve `requests` (FIFO) to completion; returns per-request
+        results in completion order plus aggregate stats."""
         cfg = self.built.model.cfg
-        logits = logits[..., :cfg.vocab_size].astype(jnp.float32)
-        if self.temperature <= 0:
-            return jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-        return jax.random.categorical(
-            key, logits / self.temperature, -1).astype(jnp.int32)[:, None]
+        B = self.max_slots
+        for r in requests:
+            if len(r.prompt) > self.cache_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt {len(r.prompt)} exceeds "
+                    f"cache_len {self.cache_len}")
+        caches = self.built.model.init_caches(B, self.cache_len)
+        queue = deque(requests)
+        key = jax.random.PRNGKey(seed)
+
+        slot_req: List[Optional[Request]] = [None] * B
+        slot_t = np.zeros(B, np.int32)         # next decode position
+        slot_left = np.zeros(B, np.int64)      # tokens still to decode
+        slot_toks: List[List[int]] = [[] for _ in range(B)]
+        slot_admit: List[Tuple[float, float, int]] = [(0.0, 0.0, 0)] * B
+        last_tok = np.zeros((B, 1), np.int32)
+        results: List[RequestResult] = []
+        prefill_steps = decode_steps = engine_step = useful = 0
+        t0 = time.perf_counter()
+        now = lambda: time.perf_counter() - t0
+
+        def finish(slot: int) -> None:
+            req = slot_req[slot]
+            t_adm, t_first, step_adm = slot_admit[slot]
+            results.append(RequestResult(
+                rid=req.rid, prompt_len=len(req.prompt),
+                tokens=np.asarray(slot_toks[slot], np.int32),
+                t_enqueued=0.0, t_admitted=t_adm, t_first_token=t_first,
+                t_finished=now(), admitted_at_step=step_adm,
+                finished_at_step=engine_step))
+            slot_req[slot] = None
+            slot_toks[slot] = []
+
+        while queue or any(r is not None for r in slot_req):
+            # --- admission: one prefill per free slot ------------------------
+            for slot in range(B):
+                if not queue:
+                    break
+                if slot_req[slot] is not None:
+                    continue
+                req = queue.popleft()
+                t_adm = now()
+                S = len(req.prompt)
+                logits, one = self._prefill(
+                    self.params,
+                    {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]})
+                caches = self._insert(caches, one, slot)
+                key, sub = jax.random.split(key)
+                tok = np.asarray(_sample(cfg, logits[:, -1], sub,
+                                         self.temperature))
+                prefill_steps += 1
+                engine_step += 1
+                useful += 1
+                slot_req[slot] = req
+                slot_t[slot] = S
+                slot_left[slot] = req.max_new_tokens - 1
+                slot_toks[slot] = [int(tok[0, 0])]
+                slot_admit[slot] = (t_adm, now(), engine_step)
+                last_tok[slot] = tok[0]
+                if slot_left[slot] == 0:
+                    finish(slot)
+
+            active = [i for i in range(B) if slot_req[i] is not None]
+            if not active:
+                continue
+            # --- one batched decode step at per-slot positions ---------------
+            pos3 = self._mrope_positions(slot_t)
+            kw = {} if pos3 is None else {"positions3": pos3}
+            logits, caches = self._decode(
+                self.params, caches, jnp.asarray(last_tok),
+                jnp.asarray(slot_t), **kw)
+            key, sub = jax.random.split(key)
+            toks = np.asarray(_sample(cfg, logits[:, 0], sub,
+                                      self.temperature))
+            decode_steps += 1
+            engine_step += 1
+            for i in active:
+                slot_toks[i].append(int(toks[i, 0]))
+                slot_t[i] += 1
+                slot_left[i] -= 1
+                last_tok[i] = toks[i]
+                useful += 1
+                if slot_left[i] == 0:
+                    finish(i)
+
+        jax.block_until_ready(caches)
+        stats = ServeStats(
+            wall_s=now(), prefill_steps=prefill_steps,
+            decode_steps=decode_steps, slots=B, useful_tokens=useful,
+            completed=len(results))
+        return results, stats

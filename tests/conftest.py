@@ -1,5 +1,14 @@
-"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the single
-real CPU device; only launch/dryrun.py forces 512 host devices."""
+"""Shared fixtures + the enforced skip/xfail inventory.
+
+NOTE: no XLA_FLAGS here — tests run on the single real CPU device;
+only launch/dryrun.py forces 512 host devices.
+
+The skip/xfail set is a pinned contract, not ambient noise: a test
+that starts skipping for a new reason, or an xfail that silently
+starts passing, fails the tier-1 run instead of shrinking coverage
+unnoticed.  To change the inventory intentionally, update
+EXPECTED_SKIP_MODULES / EXPECTED_XFAILS below in the same PR.
+"""
 import dataclasses
 
 import jax
@@ -8,6 +17,83 @@ import pytest
 
 from repro.configs import (MeshConfig, OSDPConfig, RunConfig, get_arch,
                            get_shape, reduced)
+
+# --- pinned skip/xfail inventory --------------------------------------------
+# Modules whose tests may skip, with the only sanctioned reasons:
+#   test_kernels.py      — Pallas needs jax with pltpu.CompilerParams
+#   test_distributed.py  — needs jax.set_mesh (jax >= 0.6)
+#   test_cost_model.py / test_search.py / test_model_properties.py
+#                        — hypothesis not installed in the local env
+#                          (CI installs it; these never skip there)
+EXPECTED_SKIP_MODULES = frozenset({
+    "test_kernels.py",
+    "test_distributed.py",
+    "test_cost_model.py",
+    "test_search.py",
+    "test_model_properties.py",
+})
+# Exact tests that may xfail (an XPASS of these also fails the run —
+# a silently-passing xfail means the pin is stale):
+EXPECTED_XFAILS = (
+    "test_arch_smoke.py::test_decode_matches_full_forward[hymba-1.5b]",
+)
+
+_inventory_violations = []
+
+
+def _module_of(nodeid: str) -> str:
+    return nodeid.split("::", 1)[0].rsplit("/", 1)[-1]
+
+
+def _expected_xfail(nodeid: str) -> bool:
+    mod = _module_of(nodeid)
+    tail = nodeid.split("::", 1)[-1]
+    return any(x == f"{mod}::{tail}" for x in EXPECTED_XFAILS)
+
+
+def pytest_collectreport(report):
+    # module-level skips (e.g. importorskip) surface as skipped
+    # collection reports
+    if report.skipped and report.nodeid:
+        if _module_of(report.nodeid) not in EXPECTED_SKIP_MODULES:
+            _inventory_violations.append(
+                ("collection skip", report.nodeid,
+                 str(getattr(report, "longrepr", ""))))
+
+
+def pytest_runtest_logreport(report):
+    if report.when not in ("setup", "call"):
+        return
+    wasxfail = hasattr(report, "wasxfail")
+    if report.skipped:
+        if wasxfail:
+            if not _expected_xfail(report.nodeid):
+                _inventory_violations.append(
+                    ("unpinned xfail", report.nodeid, report.wasxfail))
+        elif _module_of(report.nodeid) not in EXPECTED_SKIP_MODULES:
+            _inventory_violations.append(
+                ("unpinned skip", report.nodeid,
+                 str(getattr(report, "longrepr", ""))))
+    elif report.passed and wasxfail:
+        _inventory_violations.append(
+            ("xfail PASSED (stale pin)", report.nodeid, report.wasxfail))
+
+
+def pytest_sessionfinish(session, exitstatus):
+    if not _inventory_violations:
+        return
+    tr = session.config.pluginmanager.get_plugin("terminalreporter")
+    lines = [f"  {kind}: {nodeid}  [{reason[:120]}]"
+             for kind, nodeid, reason in _inventory_violations]
+    msg = ("skip/xfail inventory violations (pin intentional changes "
+           "in tests/conftest.py):\n" + "\n".join(lines))
+    if tr is not None:
+        tr.write_sep("=", "skip/xfail inventory", red=True)
+        tr.write_line(msg)
+    else:   # pragma: no cover - terminal plugin disabled
+        print(msg)
+    if session.exitstatus == 0:
+        session.exitstatus = 1
 
 HOST_MESH = MeshConfig((1, 1), ("data", "model"))
 

@@ -32,11 +32,22 @@ def test_train_cli_force_zdp():
     assert "done: 4 steps" in r.stdout
 
 
-def test_serve_cli():
+def test_serve_cli_legacy_static():
     r = _run(["repro.launch.serve", "--arch", "hymba-1.5b", "--reduced",
-              "--batch", "2", "--prompt-len", "32", "--new-tokens", "8"])
+              "--no-plan", "--batch", "2", "--prompt-len", "32",
+              "--new-tokens", "8"])
     assert r.returncode == 0, r.stderr[-2000:]
     assert "decoded 8 tokens" in r.stdout, r.stdout[-500:]
+
+
+def test_serve_cli_planned_continuous():
+    r = _run(["repro.launch.serve", "--arch", "qwen1.5-0.5b", "--reduced",
+              "--prompt-len", "32", "--new-tokens", "8", "--requests", "5",
+              "--mixed", "--memory-limit-gib", "4"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "serve-plan[" in r.stdout, r.stdout[-800:]   # search ran
+    assert "admission limit" in r.stdout
+    assert "served 5 requests" in r.stdout, r.stdout[-800:]
 
 
 def test_serve_cli_rejects_encoder():

@@ -1,0 +1,341 @@
+"""Serving tests (ISSUE 5): engine correctness, KV-cache accounting,
+and serving-search goldens.
+
+  * decode-vs-prefill logits parity across the three cached families
+    (dense GQA, pure-SSM mamba2, hybrid hymba — hymba gets a looser
+    tolerance for its known pre-existing decode-numerics drift, whose
+    strict-tolerance variant stays the pinned xfail in
+    test_arch_smoke.py; see CHANGES.md);
+  * scalar-t == vector-t decode (the continuous engine's per-slot
+    position vector must be a pure generalization);
+  * greedy continuous decoding is deterministic across request
+    orderings, and per-request output is bitwise equal to running the
+    request alone through the static engine;
+  * request-latency accounting sanity;
+  * predicted per-sequence cache bytes == measured `jax.eval_shape`
+    sizes of the runtime caches across every decoder arch and KV
+    dtype (the cost model's first-class KV/SSM memory term);
+  * one pinned `search_serve` golden decision row, plus a re-solve of
+    the committed BENCH_search.json training cases asserting their
+    decisions' (step_time_ms, feasible, nodes) stay byte-identical
+    (fig5/fig9 golden rows are pinned by benchmarks/fig5_end_to_end.py
+    --quick and tests/test_selective_remat.py respectively).
+"""
+import json
+import sys
+from functools import lru_cache
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_run
+from repro.configs import ARCHS, get_arch, get_shape, reduced
+from repro.core.api import search_serve
+from repro.core.descriptions import describe
+from repro.models.common import attn_geometry
+from repro.models.attention import init_kv_cache
+from repro.models.registry import build_model
+from repro.serving.engine import ContinuousEngine, Engine, Request
+
+ROOT = Path(__file__).resolve().parent.parent
+
+FAMILIES3 = ["qwen1.5-0.5b", "mamba2-2.7b", "hymba-1.5b"]
+DECODERS = sorted(a for a in ARCHS if ARCHS[a].is_decoder)
+
+
+@lru_cache(maxsize=None)
+def _served(arch):
+    run = tiny_run(arch, shape="decode_32k")
+    built = build_model(run)
+    params = built.init(jax.random.PRNGKey(0))
+    return built, params
+
+
+def _prompts(cfg, n, s, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, (n, s)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# decode correctness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,atol", [
+    ("qwen1.5-0.5b", 0.15),
+    ("mamba2-2.7b", 0.15),
+    # hymba's attn+ssm mean block drifts beyond the bf16 tolerance of
+    # the other families (known pre-existing decode numerics issue —
+    # the strict-tolerance variant is the pinned xfail in
+    # test_arch_smoke.py); the loose bound still catches structural
+    # breakage (wrong cache wiring produces O(1) logit error)
+    ("hymba-1.5b", 0.5),
+])
+def test_decode_matches_prefill(arch, atol):
+    """One decode step after an S-token prefill reproduces the
+    (S+1)-token prefill's last-position logits."""
+    built, params = _served(arch)
+    cfg = built.model.cfg
+    m = built.model
+    B, S = 2, 24
+    toks = _prompts(cfg, B, S + 1, seed=1)
+    logits_full, _ = jax.jit(m.prefill)(params, {"tokens": jnp.asarray(toks)})
+    _, caches = jax.jit(m.prefill)(
+        params, {"tokens": jnp.asarray(toks[:, :S])})
+    lg, _ = jax.jit(m.decode_step)(params, caches,
+                                   jnp.asarray(toks[:, S:S + 1]),
+                                   jnp.int32(S))
+    a = np.asarray(lg[:, 0, :cfg.vocab_size], np.float32)
+    b = np.asarray(logits_full[:, 0, :cfg.vocab_size], np.float32)
+    np.testing.assert_allclose(a, b, atol=atol, rtol=0.1)
+
+
+@pytest.mark.parametrize("arch", FAMILIES3)
+def test_scalar_t_equals_vector_t(arch):
+    """The per-slot position vector is a pure generalization: with
+    every slot at the same position, logits and caches are bitwise
+    identical to the scalar-t decode."""
+    built, params = _served(arch)
+    cfg = built.model.cfg
+    m = built.model
+    B, S = 3, 16
+    toks = _prompts(cfg, B, S)
+    _, caches_a = jax.jit(m.prefill)(params, {"tokens": jnp.asarray(toks)})
+    _, caches_b = jax.jit(m.prefill)(params, {"tokens": jnp.asarray(toks)})
+    step = _prompts(cfg, B, 1, seed=2)
+    lg_s, ca = jax.jit(m.decode_step)(params, caches_a,
+                                      jnp.asarray(step), jnp.int32(S))
+    lg_v, cb = jax.jit(m.decode_step)(params, caches_b, jnp.asarray(step),
+                                      jnp.full((B,), S, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(lg_s), np.asarray(lg_v))
+    for la, lb in zip(jax.tree_util.tree_leaves(ca),
+                      jax.tree_util.tree_leaves(cb)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", FAMILIES3)
+def test_continuous_matches_static_per_request(arch):
+    """Greedy continuous batching emits, per request, exactly the
+    tokens the static engine produces for that request alone (matched
+    cache_len -> bitwise equality)."""
+    built, params = _served(arch)
+    cfg = built.model.cfg
+    CL = 48
+    prompts = _prompts(cfg, 4, 16)
+    news = [5, 12, 3, 7]
+    eng = Engine(built, params, cache_len=CL)
+    refs = {i: eng.generate(prompts[i:i + 1], news[i]).tokens[0]
+            for i in range(4)}
+    ce = ContinuousEngine(built, params, max_slots=2, cache_len=CL)
+    results, stats = ce.run([Request(i, prompts[i], news[i])
+                             for i in range(4)])
+    assert stats.completed == 4
+    for r in results:
+        np.testing.assert_array_equal(r.tokens, refs[r.rid])
+
+
+@pytest.mark.parametrize("arch", FAMILIES3)
+def test_greedy_deterministic_across_orderings(arch):
+    """Submitting the same requests in a different order changes the
+    schedule but not any request's greedy output."""
+    built, params = _served(arch)
+    cfg = built.model.cfg
+    prompts = _prompts(cfg, 4, 12, seed=3)
+    news = [6, 2, 9, 4]
+    reqs = [Request(i, prompts[i], news[i]) for i in range(4)]
+    ce = ContinuousEngine(built, params, max_slots=2, cache_len=32)
+    res_a, _ = ce.run(reqs)
+    res_b, _ = ce.run([reqs[2], reqs[0], reqs[3], reqs[1]])
+    by_rid_a = {r.rid: r.tokens for r in res_a}
+    by_rid_b = {r.rid: r.tokens for r in res_b}
+    assert by_rid_a.keys() == by_rid_b.keys()
+    for rid in by_rid_a:
+        np.testing.assert_array_equal(by_rid_a[rid], by_rid_b[rid])
+
+
+def test_latency_accounting_sanity():
+    built, params = _served("qwen1.5-0.5b")
+    cfg = built.model.cfg
+    n = 5
+    prompts = _prompts(cfg, n, 8)
+    news = [3, 1, 6, 2, 4]
+    ce = ContinuousEngine(built, params, max_slots=2, cache_len=16)
+    results, stats = ce.run([Request(i, prompts[i], news[i])
+                             for i in range(n)])
+    assert stats.completed == n
+    assert stats.useful_tokens == sum(news)
+    assert stats.prefill_steps == n
+    assert 0.0 < stats.slot_utilization <= 1.0
+    assert stats.wall_s > 0
+    seen = set()
+    for r in results:
+        seen.add(r.rid)
+        assert r.n_generated == news[r.rid]
+        assert 0.0 <= r.t_admitted <= r.t_first_token <= r.t_finished
+        assert r.queue_wait_s >= 0.0 and r.ttft_s >= 0.0
+        assert r.ttft_s <= r.latency_s
+        assert 1 <= r.admitted_at_step <= r.finished_at_step
+    assert seen == set(range(n))
+    # with 2 slots and 5 requests, someone must have waited in queue
+    assert max(r.queue_wait_s for r in results) > 0.0
+
+
+def test_admission_respects_slot_limit():
+    """max_slots bounds in-flight work: with 1 slot, requests complete
+    strictly one after another (engine-step intervals never overlap)."""
+    built, params = _served("qwen1.5-0.5b")
+    cfg = built.model.cfg
+    prompts = _prompts(cfg, 3, 8)
+    ce = ContinuousEngine(built, params, max_slots=1, cache_len=16)
+    results, stats = ce.run([Request(i, prompts[i], 3) for i in range(3)])
+    spans = sorted((r.admitted_at_step, r.finished_at_step)
+                   for r in results)
+    for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+        assert a1 <= b0
+    assert stats.decode_steps == 3 * 2    # 2 decode tokens per request
+
+
+def test_prompt_longer_than_cache_rejected():
+    built, params = _served("qwen1.5-0.5b")
+    cfg = built.model.cfg
+    ce = ContinuousEngine(built, params, max_slots=1, cache_len=8)
+    with pytest.raises(ValueError, match="exceeds"):
+        ce.run([Request(0, _prompts(cfg, 1, 9)[0], 2)])
+
+
+# ---------------------------------------------------------------------------
+# KV-cache memory term: predicted == measured
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", DECODERS)
+def test_cache_bytes_match_eval_shape(arch):
+    """The cost model's per-sequence cache term equals the byte size
+    of the runtime caches, exactly, for every decoder arch."""
+    run = tiny_run(arch, shape="decode_32k")
+    built = build_model(run)
+    desc = describe(run.model, run.shape)
+    for B, CL in ((1, 16), (3, 48), (2, 200)):
+        caches = jax.eval_shape(lambda B=B, CL=CL:
+                                built.model.init_caches(B, CL))
+        measured = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                       for l in jax.tree_util.tree_leaves(caches))
+        predicted = desc.cache_bytes_per_seq(CL) * B
+        assert measured == predicted, (arch, B, CL, measured, predicted)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "phi4-mini-3.8b",
+                                  "dbrx-132b"])
+def test_kv_cache_bytes_across_dtypes(arch, dtype):
+    """KV-dtype scaling: the cost model's kv_dtype_bytes knob tracks
+    the runtime cache dtype exactly (attention-only archs, where the
+    whole cache is the KV term)."""
+    cfg = reduced(get_arch(arch))
+    desc = describe(cfg, get_shape("decode_32k"))
+    geom = attn_geometry(cfg, 1)
+    B, CL = 2, 32
+    cache = jax.eval_shape(lambda: init_kv_cache(cfg, geom, B, CL,
+                                                 dtype=dtype))
+    measured = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                   for l in jax.tree_util.tree_leaves(cache))
+    itemsize = jnp.zeros((), dtype).dtype.itemsize
+    predicted = desc.cache_bytes_per_seq(CL, kv_dtype_bytes=itemsize) * B
+    assert measured == predicted, (arch, dtype, measured, predicted)
+
+
+def test_sliding_window_caps_cache_bytes():
+    """Beyond the window the KV term stops growing (rolling cache)."""
+    cfg = reduced(get_arch("hymba-1.5b"))
+    assert cfg.sliding_window > 0
+    desc = describe(cfg, get_shape("decode_32k"))
+    w = cfg.sliding_window
+    assert desc.cache_bytes_per_seq(w) == desc.cache_bytes_per_seq(4 * w)
+    assert desc.cache_bytes_per_seq(w // 2) < desc.cache_bytes_per_seq(w)
+
+
+def test_cache_bytes_monotone_in_len():
+    cfg = reduced(get_arch("qwen1.5-0.5b"))
+    desc = describe(cfg, get_shape("decode_32k"))
+    vals = [desc.cache_bytes_per_seq(n) for n in (1, 8, 64, 512)]
+    assert vals == sorted(vals) and vals[0] < vals[-1]
+
+
+# ---------------------------------------------------------------------------
+# search_serve goldens + committed-benchmark stability
+# ---------------------------------------------------------------------------
+
+def test_search_serve_golden_row():
+    """Pinned serving decision: llama3-405b on 256x16GiB — the big
+    matmuls shard (ZDP, split 4), the small/undecidable ops replicate,
+    and the KV budget admits exactly 21 slots/device."""
+    plan = search_serve(get_arch("llama3-405b"), prompt_len=512,
+                        decode_len=128, n_devices=256,
+                        memory_limit_gib=16.0)
+    assert plan.feasible
+    assert plan.max_slots_per_device == 21
+    assert plan.max_concurrency == 5376
+    got = {k: (d.uniform(), d.split) for k, d in plan.decisions.items()}
+    assert got == {
+        "embed.tok": ("DP", 1), "head.out": ("ZDP", 4),
+        "final_norm": ("DP", 1), "layers.attn_qkv": ("ZDP", 4),
+        "layers.attn_out": ("ZDP", 4), "layers.attn_scores": ("DP", 1),
+        "layers.attn_norm": ("DP", 1), "layers.ffn_w13": ("ZDP", 4),
+        "layers.ffn_w2": ("ZDP", 4), "layers.ffn_norm": ("DP", 1),
+    }
+    # the same model/limit pair is unservable without the plan
+    naive = search_serve(get_arch("llama3-405b"), prompt_len=512,
+                         decode_len=128, n_devices=1,
+                         memory_limit_gib=16.0, force_mode="DP",
+                         max_slots=4)
+    assert not naive.feasible
+
+
+def test_search_serve_respects_memory_limit():
+    for gib in (2.0, 4.0):
+        plan = search_serve(get_arch("qwen1.5-0.5b"), prompt_len=128,
+                            decode_len=64, n_devices=1,
+                            memory_limit_gib=gib)
+        assert plan.feasible
+        assert plan.cost.memory <= gib * 2**30
+        # one more slot than the admission limit must NOT fit
+        over = search_serve(
+            get_arch("qwen1.5-0.5b"), prompt_len=128, decode_len=64,
+            n_devices=1, memory_limit_gib=gib,
+            slot_candidates=[plan.max_slots_per_device + 1])
+        assert not over.feasible
+
+
+def test_bench_training_decisions_unchanged():
+    """Re-solve the committed BENCH_search.json quick training cases
+    and assert the recorded decisions' fingerprints (deterministic
+    step_time_ms / feasibility / solver effort) are byte-identical —
+    the serving additions must not move any training answer."""
+    doc = json.loads((ROOT / "BENCH_search.json").read_text())
+    sys.path.insert(0, str(ROOT))
+    try:
+        from benchmarks.search_time import _search_plan_cases
+        from repro.configs import OSDPConfig
+        from repro.core.search import search_plan
+    finally:
+        sys.path.pop(0)
+    for name, desc, env, lim, batch, ckpt in _search_plan_cases(quick=True):
+        recorded = doc["current"].get(name)
+        if recorded is None:
+            continue
+        for solver, want in recorded["solvers"].items():
+            osdp = OSDPConfig(search=solver, memory_limit_bytes=lim,
+                              operator_splitting=True,
+                              default_slice_granularity=4,
+                              checkpointing=ckpt)
+            res = search_plan(desc, batch, env, osdp)
+            assert round(res.cost.time * 1e3, 3) == want["step_time_ms"], \
+                (name, solver)
+            assert res.feasible == want["feasible"], (name, solver)
+            assert res.nodes_visited == want["nodes_visited"], \
+                (name, solver)
