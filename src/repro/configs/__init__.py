@@ -8,6 +8,7 @@ from repro.configs.base import (  # noqa: F401
     AUDIO, DENSE, HYBRID, MOE, SSM, VLM,
     DECODE_32K, LONG_500K, PREFILL_32K, TRAIN_4K, SHAPES,
     SINGLE_POD_MESH, MULTI_POD_MESH, DEVICE_PRESETS,
+    ILP_BACKENDS, SOLVERS,
     DeviceInfo, MeshConfig, ModelConfig, OSDPConfig, RunConfig,
     ShapeConfig, reduced,
 )

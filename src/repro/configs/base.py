@@ -310,6 +310,11 @@ DEVICE_PRESETS = tuple(sorted(_DEVICE_PRESETS))
 # switch into a per-slice searched decision (DP/ZDP x remat/no-remat)
 SELECTIVE = "selective"
 
+# the Search Engine's interchangeable cover-problem solvers: three
+# engineered heuristics/exacts plus the explicit ILP oracle (ISSUE 6)
+SOLVERS = ("dfs", "knapsack", "greedy", "ilp")
+ILP_BACKENDS = ("auto", "milp", "bnb")
+
 
 @dataclass(frozen=True)
 class OSDPConfig:
@@ -317,7 +322,7 @@ class OSDPConfig:
 
     enabled: bool = True
     memory_limit_bytes: float = 16 * 2**30   # per-device M_limit
-    search: str = "dfs"                      # "dfs" | "knapsack" | "greedy"
+    search: str = "dfs"                      # one of SOLVERS
     allow_pod_hierarchical: bool = True      # beyond-paper ZDP_POD mode
     operator_splitting: bool = True
     default_slice_granularity: int = 4
@@ -329,8 +334,34 @@ class OSDPConfig:
     # sharding mode (4-mode axis; beyond paper)
     checkpointing: Union[bool, str] = True
     force_mode: Optional[str] = None         # "DP" | "ZDP": bypass search
+    # alias for `search` (the solver-facing name): OSDPConfig(
+    # solver="ilp") == OSDPConfig(search="ilp").  When set it overrides
+    # the `search` default; setting both to different values is an error.
+    solver: Optional[str] = None
+    # --- ilp solver knobs (search="ilp" only) ------------------------------
+    # anytime mode: > 0 caps each cover solve at this many seconds and
+    # accepts the incumbent + proven bound; 0 = solve to optimality
+    ilp_time_budget_s: float = 0.0
+    ilp_backend: str = "auto"                # one of ILP_BACKENDS
 
     def __post_init__(self):
+        if self.solver is not None:
+            if self.search != "dfs" and self.search != self.solver:
+                raise ValueError(
+                    f"search={self.search!r} and solver={self.solver!r} "
+                    f"disagree: `solver` is an alias for `search`, set "
+                    f"one of them")
+            object.__setattr__(self, "search", self.solver)
+        if self.search not in SOLVERS:
+            raise ValueError(
+                f"search={self.search!r}: unknown solver; "
+                f"known: {SOLVERS}")
+        if self.ilp_backend not in ILP_BACKENDS:
+            raise ValueError(
+                f"ilp_backend={self.ilp_backend!r}: "
+                f"known: {ILP_BACKENDS}")
+        if self.ilp_time_budget_s < 0:
+            raise ValueError("ilp_time_budget_s must be >= 0")
         if isinstance(self.checkpointing, str) \
                 and self.checkpointing != SELECTIVE:
             raise ValueError(

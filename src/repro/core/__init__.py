@@ -10,6 +10,8 @@ from repro.core.hybrid import (  # noqa: F401
     Factorization, HybridPlan, factorizations, hybrid_step_time,
     pp_bubble_fraction, slice_description, stage_bounds,
     tp_activation_time)
+from repro.core.ilp import (  # noqa: F401
+    HAVE_SCIPY_MILP, ILPSolve, solve_ilp)
 from repro.core.operator_split import chunked_ffn, chunked_matmul  # noqa: F401
 from repro.core.plan import Plan, make_plan  # noqa: F401
 from repro.core.search import (  # noqa: F401

@@ -38,8 +38,17 @@ def osdp(model: ModelConfig,
          slice_granularity: int = 4,
          checkpointing: Union[bool, str] = True,
          force_mode: Optional[str] = None,
+         ilp_time_budget_s: float = 0.0,
+         ilp_backend: str = "auto",
          cluster: Optional["ClusterSpec"] = None) -> Plan:
     """Search the optimal sharded-data-parallel plan (paper Alg. 1).
+
+    `search` picks the cover solver: "dfs" (paper Algorithm 1),
+    "knapsack", "greedy", or "ilp" — the exact integer-program oracle
+    (`core.ilp`); with `ilp_time_budget_s > 0` the ilp runs anytime,
+    returning the incumbent plus a proven bound
+    (`plan.search.lower_bound` / `.proven_optimal`), and `ilp_backend`
+    forces scipy's "milp" or the dependency-free "bnb".
 
     `checkpointing` accepts the legacy global flags True / False, or
     "selective" to co-optimize remat per slice with the sharding mode
@@ -65,6 +74,8 @@ def osdp(model: ModelConfig,
         default_slice_granularity=slice_granularity,
         checkpointing=checkpointing,
         force_mode=force_mode,
+        ilp_time_budget_s=ilp_time_budget_s,
+        ilp_backend=ilp_backend,
     )
     run = RunConfig(model=model, shape=shape, mesh=mesh, osdp=cfg)
     return make_plan(run, device, cluster=cluster)
@@ -81,6 +92,8 @@ def search_hybrid(model: Union[ModelConfig, ModelDescription],
                   slice_granularity: int = 4,
                   checkpointing: Union[bool, str] = True,
                   force_mode: Optional[str] = None,
+                  ilp_time_budget_s: float = 0.0,
+                  ilp_backend: str = "auto",
                   micro: int = 8,
                   max_tp: int = 0,
                   max_pp: int = 0,
@@ -125,6 +138,8 @@ def search_hybrid(model: Union[ModelConfig, ModelDescription],
         allow_pod_hierarchical=cluster is not None,
         checkpointing=checkpointing,
         force_mode=force_mode,
+        ilp_time_budget_s=ilp_time_budget_s,
+        ilp_backend=ilp_backend,
     )
     dev = device or (cluster.device if cluster is not None
                      else DeviceInfo())
@@ -147,6 +162,8 @@ def search_serve(model: ModelConfig,
                  operator_splitting: bool = True,
                  slice_granularity: int = 4,
                  force_mode: Optional[str] = None,
+                 ilp_time_budget_s: float = 0.0,
+                 ilp_backend: str = "auto",
                  max_slots: int = 512,
                  slot_candidates: Optional[Sequence[int]] = None,
                  cluster: Optional[ClusterSpec] = None) -> ServePlan:
@@ -177,6 +194,8 @@ def search_serve(model: ModelConfig,
         default_slice_granularity=slice_granularity,
         checkpointing=False,
         force_mode=force_mode,
+        ilp_time_budget_s=ilp_time_budget_s,
+        ilp_backend=ilp_backend,
     )
     env = CostEnv(device or (cluster.device if cluster is not None
                              else DeviceInfo()),

@@ -1,6 +1,6 @@
 """OSDP Search Engine + Scheduler (paper Algorithm 1).
 
-Three solvers over the same problem
+Four solvers over the same problem
     min_p  T(p, b)   s.t.  M(p, b) <= M_limit,  p_i in {DP, ZDP[, ZDP_POD]}
 
 With `OSDPConfig(checkpointing="selective")` the per-slice decision
@@ -31,6 +31,14 @@ behaviour byte-for-byte.
   * ``greedy``   — dT/dM ratio heuristic, O(n log n); near-optimal when
                    savings are small relative to the gap (used to seed
                    the DFS incumbent).
+  * ``ilp``      — the explicit integer-linear-program oracle
+                   (``core.ilp``): scipy's HiGHS MILP when available, a
+                   dependency-free Lagrangian-bound branch-and-bound
+                   otherwise.  Exact by construction rather than by
+                   search engineering — the reference the other three
+                   are audited against (``benchmarks/solver_audit.py``)
+                   — and *anytime* under ``OSDPConfig.ilp_time_budget_s``
+                   (incumbent + proven ``SearchResult.lower_bound``).
 
 Plan evaluation around the solvers goes through
 ``cost_model.PlanEvaluator``: per-op/per-mode cost tables are built once
@@ -69,6 +77,7 @@ from repro.core.cost_model import (DP, MODES, REMAT_INHERIT, REMAT_OFF,
                                    uniform_plan, zdp_extra_time,
                                    zdp_saving)
 from repro.core.descriptions import ModelDescription, OperatorDesc, describe
+from repro.core.ilp import solve_ilp
 from repro.core.hybrid import (Factorization, HybridPlan, factorizations,
                                hybrid_step_time, pp_boundary_time,
                                slice_description, stage_bounds,
@@ -121,11 +130,29 @@ class SearchResult:
     feasible: bool
     solver: str
     search_seconds: float
-    # solver effort: dfs = branch-and-bound nodes expanded, knapsack =
-    # DP cells relaxed, greedy = items ranked (see BENCH_search.json)
+    # solver effort, one unified integer per backend (each is the
+    # backend's natural unit of work, monotone in the solver's budget
+    # for one fixed instance — pinned by tests/test_ilp.py):
+    #   dfs      — branch-and-bound nodes expanded (0 when the root
+    #              capacity prune proves the need uncoverable)
+    #   knapsack — DP cells relaxed (0 when round-down quantization
+    #              proves the quantized need uncoverable and the solve
+    #              short-circuits to the max-saving fallback)
+    #   greedy   — items ranked (= number of items, always)
+    #   ilp      — integer variables + branch-and-bound nodes (HiGHS
+    #              mip_node_count for the milp backend, best-first pops
+    #              for the pure-Python bnb; >= 1 always — trivial and
+    #              uncoverable instances still report model size)
     nodes_visited: int = 0
     candidates: List[Tuple[int, float]] = field(default_factory=list)
     # (batch, throughput) per Scheduler iteration — Algorithm 1's P set
+    # --- ilp-only optimality certificate (None for other solvers) ----------
+    # proven lower bound on the cover objective of the winning solve,
+    # and whether the incumbent closed the gap (False = anytime mode
+    # returned early); solver_backend records which ilp engine ran
+    lower_bound: Optional[float] = None
+    proven_optimal: Optional[bool] = None
+    solver_backend: str = ""
 
 
 def auto_granularity(op, env: CostEnv, osdp: OSDPConfig,
@@ -629,6 +656,7 @@ class _SearchContext:
         selective and the uniform mirrors).
         """
         limit = self.limit
+        ilp = None
         if solver == "dfs":
             choice, nodes = _solve_dfs(items, need, node_budget)
         elif solver == "knapsack":
@@ -637,6 +665,12 @@ class _SearchContext:
         elif solver == "greedy":
             choice, _ = _solve_greedy(items, need)
             nodes = len(items)
+        elif solver == "ilp":
+            ilp = solve_ilp(items, need,
+                            time_budget=self.osdp.ilp_time_budget_s,
+                            backend=self.osdp.ilp_backend,
+                            node_budget=node_budget)
+            choice, nodes = list(ilp.choice), ilp.nodes
         else:
             raise ValueError(f"unknown solver {solver!r}")
 
@@ -704,9 +738,14 @@ class _SearchContext:
 
         cost = ev.result()
         decisions = ev.decisions(ev.current_modes)
-        return SearchResult(decisions, cost, global_batch,
-                            bool(cost.memory <= limit), self.osdp.search,
-                            0.0, nodes)
+        res = SearchResult(decisions, cost, global_batch,
+                           bool(cost.memory <= limit), self.osdp.search,
+                           0.0, nodes)
+        if ilp is not None:
+            res.lower_bound = ilp.lower_bound
+            res.proven_optimal = ilp.optimal
+            res.solver_backend = ilp.backend
+        return res
 
     def solve(self, global_batch: int) -> SearchResult:
         t0 = _time.perf_counter()

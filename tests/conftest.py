@@ -22,16 +22,27 @@ from repro.configs import (MeshConfig, OSDPConfig, RunConfig, get_arch,
 # Modules whose tests may skip, with the only sanctioned reasons:
 #   test_kernels.py      — Pallas needs jax with pltpu.CompilerParams
 #   test_distributed.py  — needs jax.set_mesh (jax >= 0.6)
-#   test_cost_model.py / test_search.py / test_model_properties.py
+#   test_cost_model.py / test_search.py / test_model_properties.py /
+#   test_solver_oracle.py
 #                        — hypothesis not installed in the local env
 #                          (CI installs it; these never skip there)
+#   test_ilp.py          — pinned ONLY when scipy is absent: the
+#                          milp-backend cases skip; the bnb cases and
+#                          everything else in the module still run
 EXPECTED_SKIP_MODULES = frozenset({
     "test_kernels.py",
     "test_distributed.py",
     "test_cost_model.py",
     "test_search.py",
     "test_model_properties.py",
+    "test_solver_oracle.py",
 })
+try:
+    from repro.core.ilp import HAVE_SCIPY_MILP as _HAVE_MILP
+except Exception:   # pragma: no cover - core must import for any test run
+    _HAVE_MILP = False
+if not _HAVE_MILP:
+    EXPECTED_SKIP_MODULES = EXPECTED_SKIP_MODULES | {"test_ilp.py"}
 # Exact tests that may xfail (an XPASS of these also fails the run —
 # a silently-passing xfail means the pin is stale):
 EXPECTED_XFAILS = (
