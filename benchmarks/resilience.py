@@ -1,0 +1,335 @@
+"""Resilience: recovery time, goodput under faults, crash-safe resume.
+
+Three row families, recorded in ``BENCH_search.json`` under
+``"resilience"``:
+
+  * **serve-loss rows** (executed on the host): the `ServeSupervisor`
+    drives a reduced model through an injected device-group loss
+    mid-run.  Headline assert: **zero lost acknowledged requests** —
+    every request reaches exactly one terminal state, results
+    acknowledged before the loss are preserved verbatim (never re-run),
+    and in-flight + queued work is re-admitted on the replanned
+    engine.  Recovery time (drain -> rescore -> replan -> new engine)
+    is measured per loss.
+
+  * **train-recovery row** (executed + planner): training with an
+    injected mid-save crash AND a device loss.  Planning runs at full
+    scale (phi4 on a 4-pod TPU fleet) where the loss of two pods makes
+    the stale plan INFEASIBLE while the re-searched plan fits — the
+    supervisor records both verdicts; execution runs the reduced model
+    on the host, resuming from the newest atomic checkpoint each time.
+
+  * **retry-goodput rows** (executed): the same transiently-failing
+    request stream served with and without the engine's bounded
+    retry/backoff.  Assert: retries recover >= the no-retry goodput
+    (completed requests and useful tokens both).
+
+``--quick`` shrinks the workloads for CI; ``--check`` asserts the
+three headline claims above plus the wall-clock ceiling.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional
+
+import numpy as np
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_search.json"
+CEILING_S = 420.0          # --check wall-clock ceiling (whole run)
+
+# the planning-scale flip config: phi4 at 26 GiB on 4 pods of 16 is
+# feasible with a mixed DP/ZDP_POD plan; after losing 2 pods the stale
+# plan needs ~35 GiB (its ZDP shards double) while a fresh full-ZDP
+# search still fits (~24 GiB)
+FLIP_ARCH = "phi4-mini-3.8b"
+FLIP_LIMIT_GIB = 26.0
+
+
+def _built(arch: str, shape: str = "decode_32k", seq: int = 0,
+           batch: int = 0):
+    import dataclasses
+    import jax
+    from repro.configs import (MeshConfig, OSDPConfig, RunConfig, get_arch,
+                               get_shape, reduced)
+    from repro.models.registry import build_model
+
+    cfg = reduced(get_arch(arch))
+    shp = get_shape(shape)
+    if seq or batch:
+        shp = dataclasses.replace(shp, seq_len=seq or shp.seq_len,
+                                  global_batch=batch or shp.global_batch)
+    run = RunConfig(model=cfg, shape=shp,
+                    mesh=MeshConfig((1, 1), ("data", "model")),
+                    osdp=OSDPConfig(enabled=False))
+    built = build_model(run)
+    params = built.init(jax.random.PRNGKey(0))
+    return cfg, built, params
+
+
+def _requests(cfg, n_req: int, prompt_len: int, n_new: int):
+    from repro.serving.engine import Request
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (n_req, prompt_len)).astype(np.int32)
+    return [Request(i, prompts[i], n_new) for i in range(n_req)]
+
+
+def _serve_loss_row(arch: str, quick: bool, out) -> dict:
+    from repro.cluster.topology import gpu_cluster
+    from repro.core.api import rescore_serve, search_serve
+    from repro.resilience import DeviceGroupLoss, FaultSchedule
+    from repro.resilience.supervisor import ServeSupervisor
+    from repro.serving.engine import ContinuousEngine
+
+    cfg, built, params = _built(arch)
+    n_req, slots, n_new = (8, 2, 4) if quick else (16, 3, 8)
+    prompt_len = 8
+    reqs = _requests(cfg, n_req, prompt_len, n_new)
+    cluster = gpu_cluster(4, 8)
+    loss_step = (n_req // 2) * (n_new + 1) // 2    # mid-run
+
+    def plan_fn(cl):
+        return search_serve(cfg, prompt_len=prompt_len, decode_len=n_new,
+                            cluster=cl, memory_limit_gib=16.0,
+                            max_slots=8)
+
+    def engine_factory(plan, cl):
+        return ContinuousEngine(built, params, max_slots=slots,
+                                cache_len=prompt_len + n_new)
+
+    def rescore_fn(plan, cl):
+        return rescore_serve(cfg, plan, cluster=cl, memory_limit_gib=16.0)
+
+    sup = ServeSupervisor(plan_fn, engine_factory, cluster,
+                          rescore_fn=rescore_fn,
+                          print_fn=lambda *a: None)
+    faults = FaultSchedule(
+        device_losses=(DeviceGroupLoss(at_step=loss_step, level="rack"),))
+    t0 = time.perf_counter()
+    run = sup.run(reqs, seed=0, faults=faults)
+    wall = time.perf_counter() - t0
+
+    rids = sorted(r.rid for r in run.results)
+    zero_lost = (rids == list(range(n_req))
+                 and all(r.status == "OK" for r in run.results))
+    rec = run.recoveries[0]
+    row = {
+        "requests": n_req, "slots": slots, "loss_step": rec.step,
+        "lost": rec.description,
+        "devices_before": rec.n_devices_before,
+        "devices_after": rec.n_devices_after,
+        "stale_plan_feasible": rec.stale_feasible,
+        "replanned": rec.replanned,
+        "requeued": rec.requeued,
+        "acked_before_loss": n_req - rec.requeued,
+        "zero_lost_acknowledged": zero_lost,
+        "recovery_ms": round(rec.recovery_s * 1e3, 1),
+        "completed": run.stats.completed,
+        "useful_tokens": run.stats.useful_tokens,
+        "wall_s": round(wall, 3),
+    }
+    out(f"serve-loss,{arch},{n_req}req,{rec.description},"
+        f"requeued={rec.requeued},recovery={row['recovery_ms']}ms,"
+        f"{'ZERO-LOST' if zero_lost else 'LOST-WORK'}")
+    return row
+
+
+def _train_recovery_row(quick: bool, out, tmp_dir: str) -> dict:
+    from repro.checkpoint import io as ckpt_io
+    from repro.cluster.topology import tpu_multipod
+    from repro.configs import get_arch, get_shape
+    from repro.core.api import evaluate_plan, osdp
+    from repro.resilience import (CheckpointCrash, DeviceGroupLoss,
+                                  FaultSchedule)
+    from repro.resilience.supervisor import TrainSupervisor
+    from repro.train.loop import train
+
+    _, built, _ = _built("qwen1.5-0.5b", shape="train_4k", seq=32,
+                         batch=2)
+    target = 6 if quick else 10
+    # crash_step must land on a ckpt_every=2 boundary to fire
+    loss_step, crash_step = (4, 2) if quick else (7, 4)
+    cluster = tpu_multipod(4, 16)
+    model = get_arch(FLIP_ARCH)
+    shape = get_shape("train_4k")
+    healthy = osdp(model, shape, cluster=cluster,
+                   memory_limit_gib=FLIP_LIMIT_GIB)
+
+    def train_fn(faults):
+        return train(built, target, ckpt_dir=tmp_dir, ckpt_every=2,
+                     keep_last=2, resume=True, log_every=0,
+                     faults=faults, print_fn=lambda *a: None)
+
+    def plan_fn(cl):
+        return osdp(model, shape, cluster=cl,
+                    memory_limit_gib=FLIP_LIMIT_GIB)
+
+    def stale_fit_fn(cl):
+        cost = evaluate_plan(model, healthy.decisions, shape, cluster=cl)
+        return cost.memory <= cl.memory_limit(FLIP_LIMIT_GIB * 2**30)
+
+    sup = TrainSupervisor(train_fn, plan_fn, cluster, ckpt_dir=tmp_dir,
+                          stale_fit_fn=stale_fit_fn,
+                          print_fn=lambda *a: None)
+    faults = FaultSchedule(
+        device_losses=(DeviceGroupLoss(at_step=loss_step, level="pod",
+                                       ways=2),),
+        ckpt_crashes=(CheckpointCrash(at_step=crash_step,
+                                      after_leaves=1),))
+    t0 = time.perf_counter()
+    run = sup.run(faults=faults)
+    wall = time.perf_counter() - t0
+    n_leaves = ckpt_io.verify(tmp_dir)     # final checkpoint intact
+
+    loss = next(r for r in run.recoveries if r.kind == "device_loss")
+    crash = next(r for r in run.recoveries if r.kind == "checkpoint_crash")
+    healthy_feasible = (healthy.search.feasible
+                        if healthy.search else True)
+    row = {
+        "arch_planned": FLIP_ARCH, "limit_gib": FLIP_LIMIT_GIB,
+        "target_steps": target,
+        "reached_step": run.result.start_step + run.result.steps,
+        "recoveries": len(run.recoveries),
+        "ckpt_crash_step": crash.step,
+        "loss_step": loss.step, "lost": loss.description,
+        "devices_before": loss.n_devices_before,
+        "devices_after": loss.n_devices_after,
+        "healthy_plan_feasible": healthy_feasible,
+        "stale_plan_feasible": loss.stale_feasible,
+        "replan_feasible": loss.replan_feasible,
+        "resumed_from_step": loss.resumed_from_step,
+        "recovery_ms": round(loss.recovery_s * 1e3, 1),
+        "final_ckpt_leaves_verified": n_leaves,
+        "wall_s": round(wall, 3),
+    }
+    out(f"train-recovery,{FLIP_ARCH},{loss.description},"
+        f"stale={'ok' if loss.stale_feasible else 'INFEASIBLE'},"
+        f"replan={'ok' if loss.replan_feasible else 'INFEASIBLE'},"
+        f"resumed@{loss.resumed_from_step},"
+        f"reached={row['reached_step']}/{target}")
+    return row
+
+
+def _retry_goodput_row(arch: str, quick: bool, out) -> dict:
+    from repro.resilience import FaultSchedule, TransientFailures
+    from repro.serving.engine import ContinuousEngine
+
+    cfg, built, params = _built(arch)
+    n_req, slots, n_new = (8, 2, 4) if quick else (16, 3, 8)
+    prompt_len = 8
+    reqs = _requests(cfg, n_req, prompt_len, n_new)
+    faults = FaultSchedule(seed=7, transient=TransientFailures(0.35))
+
+    def serve(max_retries: int):
+        eng = ContinuousEngine(built, params, max_slots=slots,
+                               cache_len=prompt_len + n_new,
+                               max_retries=max_retries, backoff_steps=2)
+        return eng.run(reqs, seed=0, faults=faults)
+
+    _, s_retry = serve(2)
+    _, s_none = serve(0)
+    row = {
+        "requests": n_req, "slots": slots, "transient_p": 0.35,
+        "retry_completed": s_retry.completed,
+        "retry_useful_tokens": s_retry.useful_tokens,
+        "retry_retries": s_retry.retries,
+        "retry_failed": s_retry.failed,
+        "retry_goodput_tok_per_step": round(
+            s_retry.goodput_tokens_per_step, 3),
+        "noretry_completed": s_none.completed,
+        "noretry_useful_tokens": s_none.useful_tokens,
+        "noretry_failed": s_none.failed,
+        "noretry_goodput_tok_per_step": round(
+            s_none.goodput_tokens_per_step, 3),
+        "retry_recovers": (
+            s_retry.completed >= s_none.completed
+            and s_retry.useful_tokens >= s_none.useful_tokens),
+    }
+    out(f"retry-goodput,{arch},p=0.35,"
+        f"retry={s_retry.completed}/{n_req} ok "
+        f"({s_retry.retries} retries),"
+        f"noretry={s_none.completed}/{n_req} ok,"
+        f"{'RECOVERS' if row['retry_recovers'] else 'WORSE'}")
+    return row
+
+
+def main(out=print, quick: bool = False, check: bool = False,
+         json_path: Optional[Path] = None) -> dict:
+    import tempfile
+    path = Path(json_path) if json_path else JSON_PATH
+    t0 = time.perf_counter()
+    rows: Dict[str, dict] = {}
+
+    serve_archs = ("qwen1.5-0.5b",) if quick \
+        else ("qwen1.5-0.5b", "mamba2-2.7b")
+    out("row,detail")
+    for arch in serve_archs:
+        rows[f"serve-loss-{arch}"] = _serve_loss_row(arch, quick, out)
+    with tempfile.TemporaryDirectory() as tmp:
+        rows["train-recovery"] = _train_recovery_row(quick, out, tmp)
+    for arch in serve_archs:
+        rows[f"retry-goodput-{arch}"] = _retry_goodput_row(
+            arch, quick, out)
+    elapsed = time.perf_counter() - t0
+
+    zero_lost = sum(1 for r in rows.values()
+                    if r.get("zero_lost_acknowledged"))
+    recovers = sum(1 for r in rows.values() if r.get("retry_recovers"))
+    tr = rows["train-recovery"]
+    out(f"# {len(rows)} rows, {zero_lost} zero-lost serve rows, "
+        f"{recovers} retry-recovers rows, {elapsed:.1f}s")
+
+    doc = {"schema": 1}
+    if path.exists():
+        doc = json.loads(path.read_text())
+    doc["resilience"] = {"rows": rows, "zero_lost_rows": zero_lost,
+                         "retry_recovers_rows": recovers,
+                         "quick": quick, "seconds": round(elapsed, 3)}
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    out(f"# wrote {path}")
+
+    if check:
+        if zero_lost < len(serve_archs):
+            raise SystemExit(
+                f"only {zero_lost}/{len(serve_archs)} serve rows kept "
+                f"zero lost acknowledged requests")
+        if not (tr["healthy_plan_feasible"]
+                and tr["stale_plan_feasible"] is False
+                and tr["replan_feasible"]):
+            raise SystemExit(
+                "train-recovery row lost its feasibility flip: "
+                f"healthy={tr['healthy_plan_feasible']} "
+                f"stale={tr['stale_plan_feasible']} "
+                f"replan={tr['replan_feasible']}")
+        if tr["reached_step"] != tr["target_steps"]:
+            raise SystemExit(
+                f"training stopped at {tr['reached_step']} of "
+                f"{tr['target_steps']} after recovery")
+        if tr["resumed_from_step"] is None:
+            raise SystemExit("device loss did not resume from a "
+                             "checkpoint")
+        if recovers < len(serve_archs):
+            raise SystemExit(
+                f"retry/backoff recovered goodput on only {recovers}"
+                f"/{len(serve_archs)} rows")
+        if elapsed > CEILING_S:
+            raise SystemExit(
+                f"run took {elapsed:.1f}s (ceiling {CEILING_S:.0f}s)")
+        out("# check passed: zero-lost serving, train flip + resume, "
+            "retry goodput, within ceiling")
+    return doc
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI subset (smaller workloads)")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the headline claims and the ceiling")
+    ap.add_argument("--json", type=Path, default=None,
+                    help=f"output path (default {JSON_PATH})")
+    a = ap.parse_args()
+    main(quick=a.quick, check=a.check, json_path=a.json)

@@ -1,23 +1,52 @@
-"""Sharded checkpointing without external deps.
+"""Sharded checkpointing without external deps — crash-safe.
 
 Layout: <dir>/step_<N>/
-    manifest.json              — tree structure, shapes, dtypes, step
+    manifest.json              — tree structure, shapes, dtypes, step,
+                                 per-leaf CRC32 + byte counts
     <escaped-leaf-path>.npy    — one file per leaf (params + optimizer)
+
+Crash safety: `save` writes the whole step into ``step_<N>.tmp`` and
+atomically renames it into place only after every leaf and the
+manifest are on disk — a writer killed mid-step leaves at most a
+``.tmp`` directory that `latest_step` never selects, so the newest
+*visible* checkpoint is always complete.  Every leaf carries a CRC32
+in the manifest; `restore` rejects truncated or corrupted leaves with
+`CheckpointCorruptError` instead of silently restoring garbage.
 
 Arrays are fetched via `jax.device_get` (gathers sharded arrays to
 host) and restored with `device_put` against the target shardings —
 correct for CPU/dev runs; a production deployment would swap the
 .npy store for a per-shard object store using the same manifest.
+
+`crash_after_leaves` is the fault-injection hook
+(`repro.resilience.faults.CheckpointCrash`): the save raises
+`CheckpointCrashError` after writing that many leaf files, exactly
+like a process kill mid-write — tests and benchmarks use it to prove
+the atomic protocol.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
-from typing import Any, Dict, Optional, Tuple
+import shutil
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+class CheckpointCrashError(RuntimeError):
+    """Injected mid-write crash (fault injection only — a real crash
+    simply kills the process at the same point)."""
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint leaf failed validation (missing file, truncated
+    bytes, or CRC mismatch)."""
 
 
 def _esc(path: str) -> str:
@@ -37,39 +66,140 @@ def _flatten(tree: Any, prefix: str = "") -> Dict[str, Any]:
     return out
 
 
-def save(ckpt_dir: str, step: int, tree: Any) -> str:
-    d = os.path.join(ckpt_dir, f"step_{step:08d}")
-    os.makedirs(d, exist_ok=True)
+def _storable(arr: np.ndarray) -> np.ndarray:
+    """numpy can't round-trip ml_dtypes: store bf16 as raw uint16."""
+    return arr.view(np.uint16) if str(arr.dtype) == "bfloat16" else arr
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *,
+         keep_last: int = 0,
+         crash_after_leaves: Optional[int] = None) -> str:
+    """Atomically write one checkpoint step; returns its directory.
+
+    `keep_last > 0` prunes older completed steps down to the newest
+    `keep_last` after the rename (retention).  `crash_after_leaves`
+    injects a mid-write crash for fault testing (see module docs).
+    """
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.isdir(tmp):        # stale debris from an earlier crash
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
     flat = _flatten(tree)
     manifest = {"step": step, "leaves": {}}
-    for path, leaf in flat.items():
+    for i, (path, leaf) in enumerate(flat.items()):
+        if crash_after_leaves is not None and i >= crash_after_leaves:
+            err = CheckpointCrashError(
+                f"injected crash writing step {step} after {i} leaves "
+                f"(tmp dir {tmp} left behind)")
+            err.step = step       # lets a supervisor consume the event
+            raise err
         arr = np.asarray(jax.device_get(leaf))
         fn = _esc(path) + ".npy"
-        dtype = str(arr.dtype)
-        if dtype == "bfloat16":       # numpy can't round-trip ml_dtypes
-            np.save(os.path.join(d, fn), arr.view(np.uint16))
-        else:
-            np.save(os.path.join(d, fn), arr)
+        stored = _storable(arr)
+        np.save(os.path.join(tmp, fn), stored)
         manifest["leaves"][path] = {
-            "file": fn, "shape": list(arr.shape), "dtype": dtype}
-    with open(os.path.join(d, "manifest.json"), "w") as f:
+            "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "crc32": zlib.crc32(np.ascontiguousarray(stored).tobytes()),
+            "nbytes": int(stored.nbytes)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
-    return d
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.isdir(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    if keep_last > 0:
+        prune(ckpt_dir, keep_last)
+    return final
+
+
+def prune(ckpt_dir: str, keep_last: int) -> List[int]:
+    """Delete all but the newest `keep_last` completed steps (and any
+    stale ``.tmp`` debris); returns the deleted step numbers."""
+    steps = completed_steps(ckpt_dir)
+    doomed = steps[:-keep_last] if keep_last > 0 else []
+    for s in doomed:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"))
+    for name in os.listdir(ckpt_dir) if os.path.isdir(ckpt_dir) else []:
+        if name.endswith(".tmp") and _STEP_RE.match(name[:-4]):
+            shutil.rmtree(os.path.join(ckpt_dir, name))
+    return doomed
+
+
+def completed_steps(ckpt_dir: str) -> List[int]:
+    """Sorted step numbers of *complete* checkpoints: a final-named
+    directory whose manifest made it to disk (the atomic rename
+    guarantees the two coincide; the manifest check additionally
+    guards legacy partially-written dirs)."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(name)
+        if m and os.path.isfile(
+                os.path.join(ckpt_dir, name, "manifest.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
-    if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [int(n.split("_")[1]) for n in os.listdir(ckpt_dir)
-             if n.startswith("step_")]
-    return max(steps) if steps else None
+    steps = completed_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def _load_leaf(d: str, path: str, meta: Dict[str, Any]) -> np.ndarray:
+    fp = os.path.join(d, meta["file"])
+    if not os.path.isfile(fp):
+        raise CheckpointCorruptError(
+            f"checkpoint {d}: leaf {path!r} is missing its data file "
+            f"{meta['file']}")
+    try:
+        arr = np.load(fp)
+    except Exception as e:
+        raise CheckpointCorruptError(
+            f"checkpoint {d}: leaf {path!r} is unreadable "
+            f"({type(e).__name__}: {e}) — the file is truncated or "
+            f"corrupt") from e
+    if "nbytes" in meta and int(arr.nbytes) != int(meta["nbytes"]):
+        raise CheckpointCorruptError(
+            f"checkpoint {d}: leaf {path!r} has {arr.nbytes} bytes, "
+            f"manifest recorded {meta['nbytes']} (truncated write)")
+    if "crc32" in meta:
+        crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+        if crc != int(meta["crc32"]):
+            raise CheckpointCorruptError(
+                f"checkpoint {d}: leaf {path!r} failed its CRC32 check "
+                f"({crc:#010x} != {int(meta['crc32']):#010x}) — the "
+                f"data is corrupt; refusing to restore garbage")
+    if meta["dtype"] == "bfloat16":
+        import ml_dtypes
+        arr = arr.view(ml_dtypes.bfloat16)
+    return arr
+
+
+def verify(ckpt_dir: str, step: Optional[int] = None) -> int:
+    """Validate every leaf of a checkpoint (CRC + sizes) without
+    restoring it; returns the number of leaves checked.  Raises
+    `CheckpointCorruptError` on the first bad leaf."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    for path, meta in manifest["leaves"].items():
+        _load_leaf(d, path, meta)
+    return len(manifest["leaves"])
 
 
 def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
             shardings: Optional[Any] = None) -> Tuple[Any, int]:
     """Restore into the structure of `like` (a pytree of arrays or
     ShapeDtypeStructs). If `shardings` is given (same structure), leaves
-    are device_put with those shardings."""
+    are device_put with those shardings.  Corrupt or truncated leaves
+    raise `CheckpointCorruptError` (see `verify`)."""
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -81,11 +211,12 @@ def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
     flat_sh = _flatten(shardings) if shardings is not None else {}
     out: Dict[str, Any] = {}
     for path, leaf in flat_like.items():
+        if path not in manifest["leaves"]:
+            raise CheckpointCorruptError(
+                f"checkpoint {d}: leaf {path!r} absent from the "
+                f"manifest (tree structure changed?)")
         meta = manifest["leaves"][path]
-        arr = np.load(os.path.join(d, meta["file"]))
-        if meta["dtype"] == "bfloat16":
-            import ml_dtypes
-            arr = arr.view(ml_dtypes.bfloat16)
+        arr = _load_leaf(d, path, meta)
         assert list(arr.shape) == list(leaf.shape), (path, arr.shape,
                                                      leaf.shape)
         if path in flat_sh and flat_sh[path] is not None:

@@ -428,6 +428,97 @@ class ClusterSpec:
                 g, n_devices=g.n_devices // consumed))
         return tuple(groups)
 
+    # -- degraded fleets (device loss) ---------------------------------------
+
+    def degrade(self, *, group: Optional[str] = None,
+                level: Optional[str] = None,
+                ways: int = 1) -> "ClusterSpec":
+        """The post-failure spec after losing part of the fleet.
+
+        Two forms:
+
+          * ``degrade(group="large")`` — a heterogeneous `DeviceGroup`
+            dies entirely (groups partition at the outermost level, so
+            the lost devices must tile whole outermost spans);
+          * ``degrade(level="pod", ways=2)`` — lose `ways` spans of the
+            named level (default: the outermost ways > 1 level).
+
+        The survivors keep their level structure; sharding capacity
+        can only shrink (`shard_ways` of every mode is non-increasing,
+        `total_hbm` strictly decreases), so a stale plan's per-device
+        memory never *improves* on the degraded spec — which is why
+        the supervisor must re-verify feasibility before resuming.
+        """
+        if group is not None and level is not None:
+            raise ValueError("degrade by group OR by level, not both")
+        outer = max((i for i, l in enumerate(self.levels) if l.ways > 1),
+                    default=None)
+        if outer is None:
+            raise ValueError("cannot degrade a single-device cluster")
+        if group is not None:
+            g = next((x for x in self.groups if x.name == group), None)
+            if g is None:
+                raise ValueError(
+                    f"no group {group!r} in "
+                    f"{[x.name for x in self.groups]}")
+            inner_span = self.n_devices // self.levels[outer].ways
+            if g.n_devices % inner_span:
+                raise ValueError(
+                    f"group {group!r} ({g.n_devices} devices) does not "
+                    f"tile the outermost spans of {inner_span}")
+            lost_ways = g.n_devices // inner_span
+            survivors = tuple(x for x in self.groups if x.name != group)
+            return self._drop_ways(outer, lost_ways, survivors)
+        idx = outer
+        if level is not None:
+            named = [i for i, l in enumerate(self.levels)
+                     if l.name == level]
+            if not named:
+                raise ValueError(
+                    f"no level {level!r} in "
+                    f"{[l.name for l in self.levels]}")
+            idx = named[0]
+        if ways < 1 or ways >= self.levels[idx].ways:
+            raise ValueError(
+                f"cannot lose {ways} of {self.levels[idx].ways} spans "
+                f"at level {self.levels[idx].name!r} (need at least "
+                f"one survivor)")
+        lost_dev = ways * (self.n_devices // self.levels[idx].ways)
+        groups = self._degraded_groups(self.n_devices - lost_dev)
+        return self._drop_ways(idx, ways, groups)
+
+    def _drop_ways(self, idx: int, lost_ways: int,
+                   groups: Tuple[DeviceGroup, ...]) -> "ClusterSpec":
+        l = self.levels[idx]
+        if lost_ways >= l.ways:
+            raise ValueError(
+                f"losing {lost_ways} of {l.ways} spans at level "
+                f"{l.name!r} leaves no survivors")
+        levels = list(self.levels)
+        levels[idx] = dataclasses.replace(l, ways=l.ways - lost_ways)
+        # a level collapsing to ways == 1 must not strand an outer
+        # ways > 1 level (the post-init invariant): fold it outward by
+        # keeping it where it is only if nothing wider sits outside
+        if levels[idx].ways == 1 and any(
+                x.ways > 1 for x in levels[idx + 1:]):
+            levels = levels[:idx] + levels[idx + 1:] + [levels[idx]]
+        return dataclasses.replace(self, levels=tuple(levels),
+                                   groups=groups)
+
+    def _degraded_groups(self, n_new: int) -> Tuple[DeviceGroup, ...]:
+        """Survivor groups after an anonymous (level-wise) loss: scale
+        proportionally when the loss tiles every group, else collapse
+        to the binding (min-HBM) group for the whole residue."""
+        if not self.groups:
+            return ()
+        n_old = self.n_devices
+        if all(g.n_devices * n_new % n_old == 0 for g in self.groups):
+            return tuple(dataclasses.replace(
+                g, n_devices=g.n_devices * n_new // n_old)
+                for g in self.groups)
+        worst = min(self.groups, key=lambda g: g.hbm_bytes)
+        return (dataclasses.replace(worst, n_devices=n_new),)
+
     def pp_boundary_bandwidth(self, pp: int) -> float:
         """Bandwidth of the link a pipeline-stage boundary crosses when
         PP is placed across the outermost (slowest) levels: the

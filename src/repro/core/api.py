@@ -205,6 +205,39 @@ def search_serve(model: ModelConfig,
         max_slots=max_slots, slot_candidates=slot_candidates)
 
 
+def rescore_serve(model: ModelConfig, plan: ServePlan,
+                  *,
+                  slots: Optional[int] = None,
+                  mesh: Optional[MeshConfig] = None,
+                  n_devices: int = 1,
+                  memory_limit_gib: float = 16.0,
+                  device: Optional[DeviceInfo] = None,
+                  cluster: Optional[ClusterSpec] = None):
+    """Re-score an existing `ServePlan` on a different cluster:
+    (ServingCost, feasible).
+
+    The resilience supervisor's first question after a device loss —
+    "does the stale plan still fit the survivors?" — answered with the
+    analytical cost model only (no search).  Pass the degraded
+    `cluster` (from `ClusterSpec.degrade`); the memory limit tightens
+    to the surviving worst group and the collective terms re-price on
+    the shrunken topology."""
+    if mesh is None:
+        mesh = (cluster.mesh_config() if cluster is not None
+                else MeshConfig((n_devices, 1), ("data", "model")))
+    cfg = OSDPConfig(
+        enabled=True,
+        memory_limit_bytes=memory_limit_gib * 2**30,
+        checkpointing=False,
+    )
+    env = CostEnv(device or (cluster.device if cluster is not None
+                             else DeviceInfo()),
+                  mesh, checkpointing=False, train=False, cluster=cluster)
+    return _search.rescore_serve_plan(
+        model, plan.workload, plan.decisions, env, cfg,
+        plan.slots_per_device if slots is None else slots)
+
+
 def evaluate_plan(model: Union[ModelConfig, ModelDescription],
                   decisions: Dict[str, Decision],
                   shape: Optional[ShapeConfig] = None,

@@ -1069,6 +1069,30 @@ def search_serve(model: ModelConfig, workload: ServingWorkload,
         inner=res)
 
 
+def rescore_serve_plan(model: ModelConfig, workload: ServingWorkload,
+                       decisions: Dict[str, Decision], env: CostEnv,
+                       osdp: OSDPConfig, slots: int
+                       ) -> Tuple[ServingCost, bool]:
+    """Re-score an existing serving plan's decisions against a (possibly
+    different) environment: (cost, fits-memory).
+
+    This is the resilience supervisor's feasibility check after a
+    device loss — a plan searched on the healthy cluster is re-costed
+    verbatim on the degraded `CostEnv` (whose `topo.memory_limit` has
+    typically tightened) to decide whether the survivors can keep
+    running it, or whether a fresh `search_serve` is required.  No
+    solver runs: only the analytical cost model."""
+    pre_shape = ShapeConfig("serve_prefill", workload.prompt_len,
+                            env.n_data, "prefill")
+    dec_shape = ShapeConfig("serve_decode", 1, env.n_data, "decode")
+    desc_pre = describe(model, pre_shape)
+    desc_dec = describe(model, dec_shape)
+    limit = env.topo.memory_limit(osdp.memory_limit_bytes)
+    sc = serving_plan_cost(desc_pre, desc_dec, decisions, workload,
+                           env, max(1, int(slots)))
+    return sc, sc.memory <= limit
+
+
 # ---------------------------------------------------------------------------
 # Hybrid Scheduler: (dp, tp, pp) factorization sweep ("3D+OSDP")
 # ---------------------------------------------------------------------------

@@ -57,6 +57,19 @@ def main(argv=None) -> int:
     ap.add_argument("--mixed", action="store_true",
                     help="mixed decode lengths (every 4th request "
                          "decodes the full --new-tokens, the rest 1/4)")
+    # --- hardening ---------------------------------------------------------
+    ap.add_argument("--max-queue", type=int, default=-1,
+                    help="queue-depth backpressure: REJECT requests "
+                         "beyond max_slots + this many waiting "
+                         "(-1 = unbounded)")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="retry budget for transiently-failed attempts")
+    ap.add_argument("--backoff-steps", type=int, default=2,
+                    help="base engine-step backoff between retries "
+                         "(doubles per attempt)")
+    ap.add_argument("--deadline-steps", type=int, default=0,
+                    help="per-request engine-step deadline "
+                         "(0 = none); expired requests end TIMED_OUT")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -97,7 +110,11 @@ def main(argv=None) -> int:
     params = built.init(jax.random.PRNGKey(args.seed))
     eng = ContinuousEngine(built, params, max_slots=slots,
                            cache_len=args.prompt_len + args.new_tokens,
-                           temperature=args.temperature)
+                           temperature=args.temperature,
+                           max_queue=(None if args.max_queue < 0
+                                      else args.max_queue),
+                           max_retries=args.max_retries,
+                           backoff_steps=args.backoff_steps)
     reqs = []
     for i in range(n_req):
         n_new = args.new_tokens
@@ -105,13 +122,19 @@ def main(argv=None) -> int:
             n_new = max(1, args.new_tokens // 4)
         prompt = rng.integers(0, cfg.vocab_size,
                               args.prompt_len).astype(np.int32)
-        reqs.append(Request(i, prompt, n_new))
+        reqs.append(Request(i, prompt, n_new,
+                            deadline_steps=args.deadline_steps or None))
     results, stats = eng.run(reqs, seed=args.seed)
     print(f"served {stats.completed} requests "
           f"({stats.useful_tokens} tokens) in {stats.wall_s:.2f}s: "
           f"{stats.tokens_per_s:.1f} tok/s, {stats.prefill_steps} "
           f"prefills + {stats.decode_steps} decode steps on {slots} "
           f"slots (utilization {stats.slot_utilization:.0%})")
+    if stats.terminal > stats.completed:
+        print(f"  non-OK terminals: {stats.rejected} rejected, "
+              f"{stats.invalid} invalid, {stats.timed_out} timed out, "
+              f"{stats.failed} failed ({stats.retries} retries, "
+              f"{stats.wasted_tokens} wasted tokens)")
     for r in results[:3]:
         print(f"  req {r.rid}: {r.n_generated} tokens, queue "
               f"{r.queue_wait_s * 1e3:.0f} ms, ttft "

@@ -44,8 +44,17 @@ def main(argv=None) -> int:
     ap.add_argument("--no-osdp", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--keep-last", type=int, default=0,
+                    help="checkpoint retention: keep the newest N "
+                         "completed steps (0 = keep everything)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest valid checkpoint under "
+                         "--ckpt-dir and treat --steps as the TOTAL "
+                         "step target (completed steps are skipped)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.resume and not args.ckpt_dir:
+        ap.error("--resume requires --ckpt-dir")
 
     model_cfg = get_arch(args.arch)
     if args.reduced:
@@ -69,7 +78,12 @@ def main(argv=None) -> int:
     built = build_model(run, plan, mesh)
     res = train(built, args.steps, seed=args.seed,
                 opt_cfg=AdamWConfig(lr=args.lr), warmup=args.warmup,
-                ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+                ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                keep_last=args.keep_last, resume=args.resume)
+    if not res.steps:
+        print(f"nothing to train: checkpoint already at step "
+              f"{res.start_step} >= target {args.steps}")
+        return 0
     print(f"done: {res.steps} steps, loss {res.losses[0]:.4f} -> "
           f"{res.losses[-1]:.4f}, {res.tokens_per_s:.0f} tok/s")
     return 0

@@ -1,0 +1,29 @@
+"""Elastic resilience layer: deterministic fault injection,
+degraded-cluster replanning, and crash-safe serving/training.
+
+`faults` is stdlib-only and imported by the runtime hooks
+(`serving.engine`, `train.loop`, `checkpoint.io`); the supervisors
+import those hooks back, so they load lazily here to keep the package
+cycle-free.
+"""
+from repro.resilience.faults import (CheckpointCrash, DeviceGroupLoss,
+                                     DeviceLost, EMPTY_SCHEDULE,
+                                     FaultSchedule, MemoryPressure,
+                                     SlowRequest, TransientFailures)
+
+__all__ = [
+    "CheckpointCrash", "DeviceGroupLoss", "DeviceLost", "EMPTY_SCHEDULE",
+    "FaultSchedule", "MemoryPressure", "SlowRequest", "TransientFailures",
+    "RecoveryEvent", "ServeSupervisor", "SupervisedServeRun",
+    "SupervisedTrainRun", "TrainSupervisor", "merge_stats",
+]
+
+_LAZY = {"RecoveryEvent", "ServeSupervisor", "SupervisedServeRun",
+         "SupervisedTrainRun", "TrainSupervisor", "merge_stats"}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from repro.resilience import supervisor
+        return getattr(supervisor, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,310 @@
+"""Degraded-cluster replanning supervisors.
+
+When a `DeviceGroupLoss` fires, the runtime raises
+`faults.DeviceLost`; the supervisors here catch it and drive the
+paper's planner through the recovery loop:
+
+    degrade the ClusterSpec  ->  re-score the stale plan (is the old
+    sharding even feasible on the survivors?)  ->  re-run the OSDP
+    search on the degraded spec  ->  verify feasibility  ->  resume.
+
+* `ServeSupervisor` wraps `ContinuousEngine.run`: on a loss it keeps
+  every acknowledged `RequestResult` (completed work is never lost or
+  re-run), rebuilds the engine from the re-searched `ServePlan` —
+  whose `max_slots_per_device` admission limit may have shrunk — and
+  re-admits the pending requests (queued + in-flight whose KV state
+  died with the devices).
+* `TrainSupervisor` wraps `train.loop.train`: on a loss it replans,
+  then resumes from the latest *valid* checkpoint
+  (`restore_or_init` inside `train`), so progress since the last save
+  is lost — exactly like the real failure — but nothing else.  An
+  injected `CheckpointCrashError` is survived the same way: the
+  atomic-save protocol guarantees the previous checkpoint is intact.
+
+Every recovery is recorded as a `RecoveryEvent` (what died, whether
+the stale plan still fit, what the replan decided, and how long
+recovery took) — the benchmark rows in `benchmarks/resilience.py` are
+built from these.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.checkpoint.io import CheckpointCrashError
+from repro.cluster.topology import ClusterSpec
+from repro.resilience.faults import DeviceLost, FaultSchedule
+
+
+@dataclass
+class RecoveryEvent:
+    """One handled failure: what fired, what the planner decided,
+    and what recovery cost."""
+
+    kind: str                     # "device_loss" | "checkpoint_crash"
+    step: int                     # engine / train step when it fired
+    description: str
+    n_devices_before: int = 0
+    n_devices_after: int = 0
+    stale_feasible: Optional[bool] = None   # old plan on new cluster
+    replan_feasible: Optional[bool] = None
+    replanned: bool = False
+    requeued: int = 0             # serving: in-flight + queued re-admitted
+    resumed_from_step: Optional[int] = None  # training: checkpoint used
+    recovery_s: float = 0.0       # catch -> new plan + engine/loop ready
+
+
+@dataclass
+class SupervisedServeRun:
+    """Outcome of `ServeSupervisor.run`: the union of every engine
+    segment's results (acknowledged results from before each loss are
+    kept verbatim), merged stats, and the recovery log."""
+
+    results: list
+    stats: object
+    recoveries: List[RecoveryEvent] = field(default_factory=list)
+    plans: list = field(default_factory=list)
+
+    @property
+    def cluster_losses(self) -> int:
+        return sum(1 for r in self.recoveries if r.kind == "device_loss")
+
+
+def merge_stats(parts: Sequence) -> object:
+    """Sum `ServeStats` across engine segments (counters add; the
+    derived properties recompute from the sums)."""
+    from repro.serving.engine import ServeStats
+    out = ServeStats(wall_s=0.0, prefill_steps=0, decode_steps=0,
+                     slots=0, useful_tokens=0, completed=0)
+    for s in parts:
+        if s is None:
+            continue
+        out.wall_s += s.wall_s
+        out.prefill_steps += s.prefill_steps
+        out.decode_steps += s.decode_steps
+        out.slots = max(out.slots, s.slots)
+        out.useful_tokens += s.useful_tokens
+        out.completed += s.completed
+        out.wasted_tokens += s.wasted_tokens
+        out.retries += s.retries
+        out.rejected += s.rejected
+        out.invalid += s.invalid
+        out.timed_out += s.timed_out
+        out.failed += s.failed
+    return out
+
+
+class ServeSupervisor:
+    """Crash-safe serving: plan -> run -> (on loss: degrade, replan,
+    drain, re-admit) -> merged results.
+
+    `plan_fn(cluster)` searches a `ServePlan` for a cluster state
+    (typically a closure over `repro.core.api.search_serve`);
+    `engine_factory(plan, cluster)` builds the `ContinuousEngine` that
+    executes it (slots from `plan.max_slots_per_device`).
+    `rescore_fn(plan, cluster)`, when given, answers whether the STALE
+    plan still fits the degraded cluster (see
+    `repro.core.api.rescore_serve`) — recorded per recovery, and when
+    it says "still feasible" the supervisor skips the re-search and
+    keeps the old plan (drain + re-admit only).
+    """
+
+    def __init__(self, plan_fn: Callable[[ClusterSpec], object],
+                 engine_factory: Callable[[object, ClusterSpec], object],
+                 cluster: ClusterSpec,
+                 rescore_fn: Optional[Callable[[object, ClusterSpec],
+                                               Tuple[object, bool]]] = None,
+                 print_fn: Callable[[str], None] = print):
+        self.plan_fn = plan_fn
+        self.engine_factory = engine_factory
+        self.cluster = cluster
+        self.rescore_fn = rescore_fn
+        self.print_fn = print_fn
+
+    def run(self, requests: Sequence, seed: int = 0,
+            faults: Optional[FaultSchedule] = None,
+            max_losses: int = 8) -> SupervisedServeRun:
+        cluster = self.cluster
+        plan = self.plan_fn(cluster)
+        if not getattr(plan, "feasible", True):
+            raise RuntimeError("initial serving plan infeasible on the "
+                               "healthy cluster")
+        engine = self.engine_factory(plan, cluster)
+        pending = list(requests)
+        acked: list = []
+        stats_parts: list = []
+        recoveries: List[RecoveryEvent] = []
+        plans = [plan]
+        faults = FaultSchedule() if faults is None else faults
+        for _ in range(max_losses + 1):
+            try:
+                results, stats = engine.run(pending, seed=seed,
+                                            faults=faults)
+                acked.extend(results)
+                stats_parts.append(stats)
+                return SupervisedServeRun(acked, merge_stats(stats_parts),
+                                          recoveries, plans)
+            except DeviceLost as e:
+                t0 = time.perf_counter()
+                # acknowledged work survives the loss verbatim
+                acked.extend(e.results)
+                stats_parts.append(e.stats)
+                ev = e.event
+                degraded = cluster.degrade(group=ev.group, level=ev.level,
+                                           ways=ev.ways)
+                rec = RecoveryEvent(
+                    kind="device_loss", step=e.step,
+                    description=ev.describe(),
+                    n_devices_before=cluster.n_devices,
+                    n_devices_after=degraded.n_devices,
+                    requeued=len(e.pending))
+                if self.rescore_fn is not None:
+                    _, rec.stale_feasible = self.rescore_fn(plan, degraded)
+                if rec.stale_feasible:
+                    # survivors can keep running the old sharding —
+                    # drain + re-admit without paying a re-search
+                    rec.replan_feasible = True
+                else:
+                    plan = self.plan_fn(degraded)
+                    rec.replanned = True
+                    rec.replan_feasible = bool(
+                        getattr(plan, "feasible", True))
+                    if not rec.replan_feasible:
+                        rec.recovery_s = time.perf_counter() - t0
+                        recoveries.append(rec)
+                        raise RuntimeError(
+                            f"no feasible serving plan on the degraded "
+                            f"cluster ({degraded.n_devices} devices "
+                            f"after losing {ev.describe()})") from e
+                    plans.append(plan)
+                cluster = degraded
+                engine = self.engine_factory(plan, cluster)
+                # re-admit in-flight + queued work on the new engine
+                # (attempt counters reset: a loss is not the request's
+                # fault — retries within a run stay bounded regardless)
+                pending = list(e.pending)
+                faults = faults.without(ev)
+                rec.recovery_s = time.perf_counter() - t0
+                recoveries.append(rec)
+                action = ("replanned" if rec.replanned
+                          else "stale plan kept")
+                self.print_fn(
+                    f"[supervisor] device loss at step {e.step} "
+                    f"({ev.describe()}): {cluster.n_devices} devices "
+                    f"remain, {action}, {rec.requeued} requests "
+                    f"re-admitted in {rec.recovery_s * 1e3:.0f} ms")
+        raise RuntimeError(f"gave up after {max_losses} device losses")
+
+
+@dataclass
+class SupervisedTrainRun:
+    result: object                # the final TrainResult
+    recoveries: List[RecoveryEvent] = field(default_factory=list)
+    plans: list = field(default_factory=list)
+
+
+class TrainSupervisor:
+    """Crash-safe training: on a device loss, degrade the spec,
+    re-score the stale plan, re-search, and resume the loop from the
+    latest valid checkpoint; on an (injected) checkpoint crash,
+    restart — the atomic save left the previous checkpoint intact.
+
+    `train_fn(faults)` runs the training loop to the TOTAL step target
+    and must restore from `ckpt_dir` itself (a closure over
+    `train.loop.train(..., resume=True)`); `plan_fn(cluster)` re-runs
+    the OSDP search and returns a plan whose `.search.feasible` (or
+    `.feasible`) gates the resume; `stale_fit_fn(cluster)`, when
+    given, reports whether the ORIGINAL plan fits the degraded
+    cluster (recorded per recovery — the benchmark's "stale plan
+    infeasible, replanned plan feasible" assertion reads it)."""
+
+    def __init__(self, train_fn: Callable[[Optional[FaultSchedule]], object],
+                 plan_fn: Callable[[ClusterSpec], object],
+                 cluster: ClusterSpec,
+                 ckpt_dir: Optional[str] = None,
+                 stale_fit_fn: Optional[Callable[[ClusterSpec],
+                                                 bool]] = None,
+                 print_fn: Callable[[str], None] = print):
+        self.train_fn = train_fn
+        self.plan_fn = plan_fn
+        self.cluster = cluster
+        self.ckpt_dir = ckpt_dir
+        self.stale_fit_fn = stale_fit_fn
+        self.print_fn = print_fn
+
+    def run(self, faults: Optional[FaultSchedule] = None,
+            max_failures: int = 8) -> SupervisedTrainRun:
+        from repro.checkpoint import io as ckpt_io
+        cluster = self.cluster
+        recoveries: List[RecoveryEvent] = []
+        plans: list = []
+        for _ in range(max_failures + 1):
+            try:
+                res = self.train_fn(faults)
+                return SupervisedTrainRun(res, recoveries, plans)
+            except DeviceLost as e:
+                t0 = time.perf_counter()
+                ev = e.event
+                degraded = cluster.degrade(group=ev.group, level=ev.level,
+                                           ways=ev.ways)
+                rec = RecoveryEvent(
+                    kind="device_loss", step=e.step,
+                    description=ev.describe(),
+                    n_devices_before=cluster.n_devices,
+                    n_devices_after=degraded.n_devices)
+                if self.stale_fit_fn is not None:
+                    rec.stale_feasible = bool(self.stale_fit_fn(degraded))
+                plan = self.plan_fn(degraded)
+                feas = getattr(plan, "feasible", None)
+                if feas is None:
+                    feas = getattr(getattr(plan, "search", None),
+                                   "feasible", True)
+                rec.replanned = True
+                rec.replan_feasible = bool(feas)
+                if not rec.replan_feasible:
+                    rec.recovery_s = time.perf_counter() - t0
+                    recoveries.append(rec)
+                    raise RuntimeError(
+                        f"no feasible training plan on the degraded "
+                        f"cluster ({degraded.n_devices} devices after "
+                        f"losing {ev.describe()})") from e
+                plans.append(plan)
+                cluster = degraded
+                if self.ckpt_dir:
+                    rec.resumed_from_step = ckpt_io.latest_step(
+                        self.ckpt_dir)
+                faults = faults.without(ev) if faults is not None else None
+                rec.recovery_s = time.perf_counter() - t0
+                recoveries.append(rec)
+                self.print_fn(
+                    f"[supervisor] device loss at train step {e.step} "
+                    f"({ev.describe()}): replanned for "
+                    f"{cluster.n_devices} devices, resuming from "
+                    f"checkpoint step {rec.resumed_from_step}")
+            except CheckpointCrashError as e:
+                # the injected mid-save kill: consume the event so the
+                # restart's save succeeds, then simply run again — the
+                # atomic protocol guarantees the newest visible
+                # checkpoint is complete
+                step = getattr(e, "step", None)
+                ev = (faults.checkpoint_crash_at(step)
+                      if faults is not None and step is not None else None)
+                if ev is None:
+                    raise
+                faults = faults.without(ev)
+                rec = RecoveryEvent(
+                    kind="checkpoint_crash", step=ev.at_step,
+                    description=f"save crashed after "
+                                f"{ev.after_leaves} leaves",
+                    n_devices_before=cluster.n_devices,
+                    n_devices_after=cluster.n_devices)
+                if self.ckpt_dir:
+                    rec.resumed_from_step = ckpt_io.latest_step(
+                        self.ckpt_dir)
+                recoveries.append(rec)
+                self.print_fn(
+                    f"[supervisor] checkpoint crash at step "
+                    f"{ev.at_step}: previous checkpoint "
+                    f"{rec.resumed_from_step} intact, restarting")
+        raise RuntimeError(f"gave up after {max_failures} failures")

@@ -29,6 +29,7 @@ needed on the device.
 """
 from __future__ import annotations
 
+import math
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -140,27 +141,39 @@ class Engine:
 # continuous batching
 # ---------------------------------------------------------------------------
 
+# terminal request states (RequestResult.status)
+OK = "OK"                  # all max_new_tokens generated
+INVALID = "INVALID"        # rejected at validation, never admitted
+REJECTED = "REJECTED"      # queue-depth backpressure, never admitted
+TIMED_OUT = "TIMED_OUT"    # deadline passed (queued or mid-decode)
+FAILED = "FAILED"          # transient failures exhausted the retries
+
+
 @dataclass(frozen=True)
 class Request:
-    """One serving request: a prompt and a decode budget."""
+    """One serving request: a prompt, a decode budget, and optional
+    deadlines.  `deadline_steps` is an absolute engine-step index by
+    which the request must finish (the deterministic clock used by
+    tests/benchmarks); `timeout_s` is the host-clock analogue.
+    Validation happens at engine admission (`ContinuousEngine.run`
+    returns an INVALID `RequestResult` for a bad request instead of
+    raising mid-run and abandoning the other live slots)."""
 
     rid: int
     prompt: np.ndarray            # (S,) int32 token ids
     max_new_tokens: int
-
-    def __post_init__(self):
-        if self.max_new_tokens < 1:
-            raise ValueError("max_new_tokens must be >= 1")
-        p = np.asarray(self.prompt)
-        if p.ndim != 1 or p.size < 1:
-            raise ValueError("prompt must be a non-empty 1-D token array")
+    deadline_steps: Optional[int] = None
+    timeout_s: Optional[float] = None
 
 
 @dataclass
 class RequestResult:
     """Per-request output + latency accounting (host-clock seconds
     relative to `ContinuousEngine.run`'s start, plus the deterministic
-    engine-step clock)."""
+    engine-step clock).  `status` is one of the terminal states OK /
+    INVALID / REJECTED / TIMED_OUT / FAILED; only OK results carry a
+    complete generation (TIMED_OUT / FAILED keep their partial tokens
+    for inspection, but they do not count toward useful throughput)."""
 
     rid: int
     prompt_len: int
@@ -171,6 +184,13 @@ class RequestResult:
     t_finished: float
     admitted_at_step: int
     finished_at_step: int
+    status: str = OK
+    attempts: int = 1
+    error: str = ""
+
+    @property
+    def ok(self) -> bool:
+        return self.status == OK
 
     @property
     def n_generated(self) -> int:
@@ -192,7 +212,9 @@ class RequestResult:
 
 @dataclass
 class ServeStats:
-    """Aggregate engine counters for one `run`."""
+    """Aggregate engine counters for one `run`.  `completed` counts OK
+    terminals only; `useful_tokens` counts tokens of still-live or OK
+    requests (aborted attempts move theirs to `wasted_tokens`)."""
 
     wall_s: float
     prefill_steps: int
@@ -200,10 +222,28 @@ class ServeStats:
     slots: int
     useful_tokens: int
     completed: int
+    wasted_tokens: int = 0
+    retries: int = 0
+    rejected: int = 0
+    invalid: int = 0
+    timed_out: int = 0
+    failed: int = 0
+
+    @property
+    def terminal(self) -> int:
+        """Every request reached a terminal state — OK or not."""
+        return (self.completed + self.rejected + self.invalid
+                + self.timed_out + self.failed)
 
     @property
     def tokens_per_s(self) -> float:
         return self.useful_tokens / max(self.wall_s, 1e-9)
+
+    @property
+    def goodput_tokens_per_step(self) -> float:
+        """OK-request tokens per decode step — the deterministic
+        throughput metric fault benchmarks compare."""
+        return self.useful_tokens / max(self.decode_steps, 1)
 
     @property
     def slot_utilization(self) -> float:
@@ -215,21 +255,58 @@ class ServeStats:
                 / max(produced, 1))
 
 
+@dataclass
+class _Entry:
+    """One queue entry: the request plus its retry bookkeeping."""
+
+    req: Request
+    attempt: int = 1
+    not_before: int = 0           # engine step gating re-admission
+
+
 class ContinuousEngine:
-    """Continuous batching over a fixed slot pool (see module docs)."""
+    """Continuous batching over a fixed slot pool (see module docs).
+
+    Hardening knobs (all off by default — the no-fault, no-deadline
+    path is byte-identical to the pre-resilience engine):
+
+      * `max_queue` — queue-depth backpressure: requests beyond
+        `max_slots + max_queue` waiting at submission are REJECTED
+        instead of queued (None = unbounded);
+      * `max_retries` / `backoff_steps` — transiently-failed attempts
+        (fault-injected, or a real shard error in production) are
+        requeued with exponential backoff `backoff_steps * 2**(attempt
+        - 1)` engine steps, then FAILED;
+      * per-request `deadline_steps` / `timeout_s` — expired requests
+        (queued or mid-decode) terminate TIMED_OUT, freeing the slot;
+      * `faults` (a `resilience.faults.FaultSchedule` passed to `run`)
+        injects device loss (raises `DeviceLost` carrying acknowledged
+        results + requeueable pending work for the supervisor),
+        transient failures, stalls, and admission pressure (graceful
+        degradation: the effective slot count shrinks before memory
+        does).
+    """
 
     def __init__(self, built: Built, params: Dict[str, jax.Array],
                  max_slots: int, cache_len: int,
-                 temperature: float = 0.0):
+                 temperature: float = 0.0,
+                 max_queue: Optional[int] = None,
+                 max_retries: int = 2, backoff_steps: int = 2):
         cfg = built.model.cfg
         assert cfg.is_decoder, "encoder-only models cannot decode"
         if max_slots < 1 or cache_len < 1:
             raise ValueError("need max_slots >= 1 and cache_len >= 1")
+        if max_retries < 0 or backoff_steps < 1:
+            raise ValueError("need max_retries >= 0 and "
+                             "backoff_steps >= 1")
         self.built = built
         self.params = params
         self.max_slots = int(max_slots)
         self.cache_len = int(cache_len)
         self.temperature = float(temperature)
+        self.max_queue = None if max_queue is None else int(max_queue)
+        self.max_retries = int(max_retries)
+        self.backoff_steps = int(backoff_steps)
         self._prefill = make_prefill_step(built, self.cache_len)
         self._decode = make_serve_step(built)
 
@@ -248,19 +325,65 @@ class ContinuousEngine:
             jnp.asarray(t_vec, jnp.int32)[:, None, None],
             (len(t_vec), 1, 3))
 
-    def run(self, requests: Sequence[Request], seed: int = 0
-            ) -> Tuple[List[RequestResult], ServeStats]:
-        """Serve `requests` (FIFO) to completion; returns per-request
-        results in completion order plus aggregate stats."""
+    def _validate(self, req: Request) -> Optional[str]:
+        """Reason the request can never be served, or None."""
+        p = np.asarray(req.prompt)
+        if p.ndim != 1 or p.size < 1:
+            return "prompt must be a non-empty 1-D token array"
+        if p.size > self.cache_len:
+            return (f"prompt {p.size} exceeds cache_len "
+                    f"{self.cache_len}")
+        if req.max_new_tokens < 1:
+            return "max_new_tokens must be >= 1"
+        return None
+
+    @staticmethod
+    def _unserved(req: Request, status: str, error: str,
+                  attempts: int = 0) -> RequestResult:
+        p = np.asarray(req.prompt)
+        return RequestResult(
+            rid=req.rid, prompt_len=int(p.size) if p.ndim == 1 else 0,
+            tokens=np.zeros(0, np.int32), t_enqueued=0.0,
+            t_admitted=0.0, t_first_token=0.0, t_finished=0.0,
+            admitted_at_step=0, finished_at_step=0, status=status,
+            attempts=attempts, error=error)
+
+    def run(self, requests: Sequence[Request], seed: int = 0,
+            faults=None) -> Tuple[List[RequestResult], ServeStats]:
+        """Serve `requests` (FIFO) to a terminal state each; returns
+        per-request results in completion order plus aggregate stats.
+
+        With a `FaultSchedule`, injected failures play out
+        deterministically (same seed -> same terminal states); an
+        injected device loss raises `resilience.faults.DeviceLost`
+        carrying the acknowledged results and the pending requests a
+        supervisor must re-admit on the replanned engine."""
+        from repro.resilience.faults import DeviceLost, EMPTY_SCHEDULE
+        if faults is None:
+            faults = EMPTY_SCHEDULE
         cfg = self.built.model.cfg
         B = self.max_slots
+        results: List[RequestResult] = []
+        n_invalid = n_rejected = 0
+        queue: deque = deque()
+        capacity = (None if self.max_queue is None
+                    else B + self.max_queue)
         for r in requests:
-            if len(r.prompt) > self.cache_len:
-                raise ValueError(
-                    f"request {r.rid}: prompt {len(r.prompt)} exceeds "
-                    f"cache_len {self.cache_len}")
+            err = self._validate(r)
+            if err is not None:
+                results.append(self._unserved(r, INVALID, err))
+                n_invalid += 1
+            elif capacity is not None and len(queue) >= capacity:
+                results.append(self._unserved(
+                    r, REJECTED,
+                    f"backpressure: {len(queue)} requests already "
+                    f"waiting (max_slots {B} + max_queue "
+                    f"{self.max_queue})"))
+                n_rejected += 1
+            else:
+                queue.append(_Entry(r))
+
         caches = self.built.model.init_caches(B, self.cache_len)
-        queue = deque(requests)
         key = jax.random.PRNGKey(seed)
 
         slot_req: List[Optional[Request]] = [None] * B
@@ -268,32 +391,120 @@ class ContinuousEngine:
         slot_left = np.zeros(B, np.int64)      # tokens still to decode
         slot_toks: List[List[int]] = [[] for _ in range(B)]
         slot_admit: List[Tuple[float, float, int]] = [(0.0, 0.0, 0)] * B
+        slot_attempt = [1] * B
+        slot_fail_at: List[Optional[int]] = [None] * B  # injected abort
+        slot_stall = np.zeros(B, np.int64)     # stalled decode steps left
         last_tok = np.zeros((B, 1), np.int32)
-        results: List[RequestResult] = []
         prefill_steps = decode_steps = engine_step = useful = 0
+        wasted = retries = n_timeout = n_failed = 0
         t0 = time.perf_counter()
         now = lambda: time.perf_counter() - t0
 
-        def finish(slot: int) -> None:
+        def finish(slot: int, status: str = OK, error: str = "") -> None:
+            nonlocal useful, wasted, n_timeout, n_failed
             req = slot_req[slot]
             t_adm, t_first, step_adm = slot_admit[slot]
+            n_tok = len(slot_toks[slot])
+            if status != OK:
+                useful -= n_tok
+                wasted += n_tok
+                if status == TIMED_OUT:
+                    n_timeout += 1
+                elif status == FAILED:
+                    n_failed += 1
             results.append(RequestResult(
                 rid=req.rid, prompt_len=len(req.prompt),
                 tokens=np.asarray(slot_toks[slot], np.int32),
                 t_enqueued=0.0, t_admitted=t_adm, t_first_token=t_first,
                 t_finished=now(), admitted_at_step=step_adm,
-                finished_at_step=engine_step))
+                finished_at_step=engine_step, status=status,
+                attempts=slot_attempt[slot], error=error))
             slot_req[slot] = None
             slot_toks[slot] = []
 
+        def abort(slot: int) -> None:
+            """Transient failure of the slot's current attempt:
+            requeue with backoff, or FAILED when retries are spent."""
+            nonlocal useful, wasted, retries
+            req = slot_req[slot]
+            attempt = slot_attempt[slot]
+            if attempt <= self.max_retries:
+                n_tok = len(slot_toks[slot])
+                useful -= n_tok
+                wasted += n_tok
+                retries += 1
+                queue.append(_Entry(
+                    req, attempt + 1,
+                    engine_step
+                    + self.backoff_steps * 2 ** (attempt - 1)))
+                slot_req[slot] = None
+                slot_toks[slot] = []
+            else:
+                finish(slot, FAILED,
+                       f"transient failure on attempt {attempt} "
+                       f"(retry budget {self.max_retries} spent)")
+
+        def expired(req: Request) -> Optional[str]:
+            if (req.deadline_steps is not None
+                    and engine_step >= req.deadline_steps):
+                return (f"deadline_steps {req.deadline_steps} passed "
+                        f"at engine step {engine_step}")
+            if req.timeout_s is not None and now() > req.timeout_s:
+                return f"timeout_s {req.timeout_s} passed"
+            return None
+
+        def pop_admittable() -> Optional[_Entry]:
+            """First queued entry whose backoff window opened; expires
+            dead-on-arrival entries along the way.  Entries still
+            backing off rotate to the tail (their FIFO position is
+            already forfeit)."""
+            nonlocal n_timeout
+            for _ in range(len(queue)):
+                ent = queue.popleft()
+                why = expired(ent.req)
+                if why is not None:
+                    res = self._unserved(ent.req, TIMED_OUT,
+                                         "expired in queue: " + why,
+                                         attempts=ent.attempt - 1)
+                    res.t_finished = now()
+                    res.finished_at_step = engine_step
+                    results.append(res)
+                    n_timeout += 1
+                    continue
+                if ent.not_before <= engine_step:
+                    return ent
+                queue.append(ent)
+            return None
+
         while queue or any(r is not None for r in slot_req):
+            ev = faults.device_loss_at(engine_step)
+            if ev is not None:
+                pending = [slot_req[i] for i in range(B)
+                           if slot_req[i] is not None]
+                pending += [e.req for e in queue]
+                stats = self._stats(
+                    now(), prefill_steps, decode_steps, useful,
+                    results, wasted, retries, n_rejected, n_invalid,
+                    n_timeout, n_failed)
+                raise DeviceLost(ev, engine_step, results=results,
+                                 stats=stats, pending=pending)
+            eff = B
+            if not faults.empty:
+                eff = max(1, min(B, int(math.ceil(
+                    B * faults.slot_factor(engine_step)))))
             # --- admission: one prefill per free slot ------------------------
+            n_live = sum(1 for r in slot_req if r is not None)
             for slot in range(B):
                 if not queue:
                     break
                 if slot_req[slot] is not None:
                     continue
-                req = queue.popleft()
+                if n_live >= eff:
+                    break
+                ent = pop_admittable()
+                if ent is None:
+                    break
+                req = ent.req
                 t_adm = now()
                 S = len(req.prompt)
                 logits, one = self._prefill(
@@ -306,17 +517,31 @@ class ContinuousEngine:
                 prefill_steps += 1
                 engine_step += 1
                 useful += 1
+                n_live += 1
                 slot_req[slot] = req
+                slot_attempt[slot] = ent.attempt
+                slot_fail_at[slot] = faults.fail_after_tokens(
+                    req.rid, ent.attempt, req.max_new_tokens)
+                slot_stall[slot] = faults.stall_steps(req.rid)
                 slot_t[slot] = S
                 slot_left[slot] = req.max_new_tokens - 1
                 slot_toks[slot] = [int(tok[0, 0])]
                 slot_admit[slot] = (t_adm, now(), engine_step)
                 last_tok[slot] = tok[0]
-                if slot_left[slot] == 0:
+                if (slot_fail_at[slot] is not None
+                        and len(slot_toks[slot]) >= slot_fail_at[slot]):
+                    abort(slot)
+                    n_live -= 1
+                elif slot_left[slot] == 0:
                     finish(slot)
+                    n_live -= 1
 
             active = [i for i in range(B) if slot_req[i] is not None]
             if not active:
+                if queue:
+                    # every queued entry is backing off: burn one
+                    # engine step so their windows eventually open
+                    engine_step += 1
                 continue
             # --- one batched decode step at per-slot positions ---------------
             pos3 = self._mrope_positions(slot_t)
@@ -330,17 +555,39 @@ class ContinuousEngine:
             decode_steps += 1
             engine_step += 1
             for i in active:
-                slot_toks[i].append(int(toks[i, 0]))
-                slot_t[i] += 1
-                slot_left[i] -= 1
-                last_tok[i] = toks[i]
-                useful += 1
-                if slot_left[i] == 0:
+                stalled = slot_stall[i] > 0
+                if stalled:
+                    # a stuck request burns the step without producing
+                    slot_stall[i] -= 1
+                else:
+                    slot_toks[i].append(int(toks[i, 0]))
+                    slot_t[i] += 1
+                    slot_left[i] -= 1
+                    last_tok[i] = toks[i]
+                    useful += 1
+                if (not stalled and slot_fail_at[i] is not None
+                        and len(slot_toks[i]) >= slot_fail_at[i]):
+                    abort(i)
+                elif slot_left[i] == 0 and not stalled:
                     finish(i)
+                else:
+                    why = expired(slot_req[i])
+                    if why is not None:
+                        finish(i, TIMED_OUT, why)
 
         jax.block_until_ready(caches)
-        stats = ServeStats(
-            wall_s=now(), prefill_steps=prefill_steps,
-            decode_steps=decode_steps, slots=B, useful_tokens=useful,
-            completed=len(results))
+        stats = self._stats(now(), prefill_steps, decode_steps, useful,
+                            results, wasted, retries, n_rejected,
+                            n_invalid, n_timeout, n_failed)
         return results, stats
+
+    def _stats(self, wall_s, prefill_steps, decode_steps, useful,
+               results, wasted, retries, n_rejected, n_invalid,
+               n_timeout, n_failed) -> ServeStats:
+        return ServeStats(
+            wall_s=wall_s, prefill_steps=prefill_steps,
+            decode_steps=decode_steps, slots=self.max_slots,
+            useful_tokens=useful,
+            completed=sum(1 for r in results if r.status == OK),
+            wasted_tokens=wasted, retries=retries, rejected=n_rejected,
+            invalid=n_invalid, timed_out=n_timeout, failed=n_failed)

@@ -101,43 +101,96 @@ class TrainResult:
     losses: list
     tokens_per_s: float
     final_metrics: Dict[str, float] = field(default_factory=dict)
+    start_step: int = 0
 
 
-def train(built: Built, n_steps: int, *, seed: int = 0,
-          opt_cfg: Optional[AdamWConfig] = None,
-          ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
-          log_every: int = 10, batch_override: Optional[int] = None,
-          seq_override: Optional[int] = None, warmup: int = 100,
-          total_steps: int = 10_000,
-          print_fn=print) -> TrainResult:
-    """Single-host training driver (CPU smoke / example scale)."""
+def restore_or_init(built: Built, ckpt_dir: Optional[str], *,
+                    seed: int = 0,
+                    opt_cfg: Optional[AdamWConfig] = None,
+                    warmup: int = 100, total_steps: int = 10_000,
+                    print_fn=print):
+    """(step_fn, params, opt_state, start_step): resume from the
+    latest *valid* checkpoint under `ckpt_dir` when one exists, else
+    a fresh init — what `launch/train.py --resume` and the resilience
+    supervisor call after a crash or a replan.  Checkpoint validation
+    (CRC + sizes) happens inside `checkpoint.io.restore`; a corrupt
+    latest step raises `CheckpointCorruptError` rather than silently
+    restoring garbage."""
     step_fn, init_fn = make_train_step(built, opt_cfg, warmup=warmup,
                                        total_steps=total_steps)
     params, opt_state = init_fn(jax.random.PRNGKey(seed))
-    ds = Dataset(built.run.model, built.run.shape, seed=seed)
     start_step = 0
     if ckpt_dir and ckpt_io.latest_step(ckpt_dir) is not None:
         (params, opt_state), start_step = ckpt_io.restore(
             ckpt_dir, (params, opt_state))
         print_fn(f"restored checkpoint at step {start_step}")
+    return step_fn, params, opt_state, start_step
+
+
+def train(built: Built, n_steps: int, *, seed: int = 0,
+          opt_cfg: Optional[AdamWConfig] = None,
+          ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
+          keep_last: int = 0, resume: bool = False,
+          log_every: int = 10, batch_override: Optional[int] = None,
+          seq_override: Optional[int] = None, warmup: int = 100,
+          total_steps: int = 10_000, faults=None,
+          print_fn=print) -> TrainResult:
+    """Single-host training driver (CPU smoke / example scale).
+
+    `resume=True` makes `n_steps` the TOTAL step target: a restored
+    run skips its already-completed steps (restoring at step >=
+    `n_steps` trains nothing).  The default (False) keeps the legacy
+    semantics — train `n_steps` more from wherever the restore landed.
+
+    `keep_last > 0` prunes checkpoint retention to the newest N
+    completed steps.  `faults` (a `resilience.faults.FaultSchedule`)
+    injects device losses (raising `DeviceLost` at the scheduled
+    step — progress since the last checkpoint is lost, exactly like
+    the real failure) and checkpoint-write crashes
+    (`CheckpointCrashError` mid-save).
+    """
+    step_fn, params, opt_state, start_step = restore_or_init(
+        built, ckpt_dir, seed=seed, opt_cfg=opt_cfg, warmup=warmup,
+        total_steps=total_steps, print_fn=print_fn)
+    ds = Dataset(built.run.model, built.run.shape, seed=seed)
+    target = n_steps if resume else start_step + n_steps
+    if resume and start_step >= target:
+        print_fn(f"nothing to do: restored step {start_step} >= "
+                 f"target {target}")
+        return TrainResult(0, [], 0.0, {}, start_step)
+
+    def save(step: int) -> None:
+        crash = (faults.checkpoint_crash_at(step)
+                 if faults is not None else None)
+        ckpt_io.save(ckpt_dir, step, (params, opt_state),
+                     keep_last=keep_last,
+                     crash_after_leaves=(crash.after_leaves
+                                         if crash else None))
 
     losses = []
     t0 = time.perf_counter()
     tokens = 0
-    for s in range(start_step, start_step + n_steps):
+    metrics = {}
+    for s in range(start_step, target):
+        if faults is not None:
+            ev = faults.device_loss_at(s)
+            if ev is not None:
+                from repro.resilience.faults import DeviceLost
+                raise DeviceLost(ev, s)
         batch = {k: jnp.asarray(v) for k, v in ds.global_batch(
             s, batch=batch_override, seq=seq_override).items()}
         tokens += int(np.prod(batch["labels"].shape))
         params, opt_state, metrics = step_fn(params, opt_state, batch)
         loss = float(metrics["loss"])
         losses.append(loss)
-        if log_every and (s % log_every == 0 or s == start_step + n_steps - 1):
+        if log_every and (s % log_every == 0 or s == target - 1):
             print_fn(f"step {s:5d} loss {loss:.4f} "
                      f"gnorm {float(metrics['grad_norm']):.3f}")
         if ckpt_dir and ckpt_every and (s + 1) % ckpt_every == 0:
-            ckpt_io.save(ckpt_dir, s + 1, (params, opt_state))
+            save(s + 1)
     dt = time.perf_counter() - t0
     if ckpt_dir:
-        ckpt_io.save(ckpt_dir, start_step + n_steps, (params, opt_state))
-    return TrainResult(n_steps, losses, tokens / dt,
-                       {k: float(v) for k, v in metrics.items()})
+        save(target)
+    return TrainResult(target - start_step, losses, tokens / dt,
+                       {k: float(v) for k, v in metrics.items()},
+                       start_step)

@@ -202,11 +202,20 @@ def test_admission_respects_slot_limit():
 
 
 def test_prompt_longer_than_cache_rejected():
+    """An unservable request terminates INVALID instead of raising
+    mid-run (which would abandon every other live slot)."""
     built, params = _served("qwen1.5-0.5b")
     cfg = built.model.cfg
     ce = ContinuousEngine(built, params, max_slots=1, cache_len=8)
-    with pytest.raises(ValueError, match="exceeds"):
-        ce.run([Request(0, _prompts(cfg, 1, 9)[0], 2)])
+    good = Request(1, _prompts(cfg, 1, 4)[0], 2)
+    results, stats = ce.run([Request(0, _prompts(cfg, 1, 9)[0], 2), good])
+    by_rid = {r.rid: r for r in results}
+    assert by_rid[0].status == "INVALID"
+    assert "exceeds" in by_rid[0].error
+    assert by_rid[0].n_generated == 0
+    assert by_rid[1].status == "OK"
+    assert by_rid[1].n_generated == 2
+    assert stats.invalid == 1 and stats.completed == 1
 
 
 # ---------------------------------------------------------------------------
