@@ -19,11 +19,12 @@ from repro.configs.base import (DeviceInfo, MeshConfig, ModelConfig,
                                 OSDPConfig, RunConfig, ShapeConfig,
                                 SINGLE_POD_MESH)
 from repro.core.cost_model import (CostEnv, Decision, PlanCost,
-                                   PlanEvaluator, ServingWorkload)
+                                   PlanEvaluator, RequestClass,
+                                   RequestClassMix, ServingWorkload)
 from repro.core.descriptions import ModelDescription, describe
 from repro.core.hybrid import Factorization, HybridPlan
 from repro.core.plan import Plan, make_plan
-from repro.core.search import ServePlan
+from repro.core.search import FleetPlan, ServePlan
 from repro.core import search as _search
 
 
@@ -166,7 +167,8 @@ def search_serve(model: ModelConfig,
                  ilp_backend: str = "auto",
                  max_slots: int = 512,
                  slot_candidates: Optional[Sequence[int]] = None,
-                 cluster: Optional[ClusterSpec] = None) -> ServePlan:
+                 cluster: Optional[ClusterSpec] = None,
+                 mix: Optional[RequestClassMix] = None) -> ServePlan:
     """Search the optimal serving configuration (inference OSDP).
 
     Same §3.1 trade as training — memory vs utilization per operator
@@ -182,6 +184,10 @@ def search_serve(model: ModelConfig,
     `mesh` defaults to an (n_devices, 1) data mesh (or the cluster's);
     `force_mode="DP"` reproduces the unplanned replicated engine,
     `force_mode="ZDP"` weight-sharded serving without the search.
+
+    A `mix` (`RequestClassMix`) replaces (`prompt_len`, `decode_len`)
+    with weighted request classes priced per class; a single-class mix
+    is an exact alias of the legacy workload.
     """
     if mesh is None:
         mesh = (cluster.mesh_config() if cluster is not None
@@ -200,9 +206,62 @@ def search_serve(model: ModelConfig,
     env = CostEnv(device or (cluster.device if cluster is not None
                              else DeviceInfo()),
                   mesh, checkpointing=False, train=False, cluster=cluster)
+    workload = (mix if mix is not None
+                else ServingWorkload(prompt_len, decode_len))
     return _search.search_serve(
-        model, ServingWorkload(prompt_len, decode_len), env, cfg,
+        model, workload, env, cfg,
         max_slots=max_slots, slot_candidates=slot_candidates)
+
+
+def search_fleet(model: ModelConfig,
+                 *,
+                 mix: Optional[RequestClassMix] = None,
+                 classes: Optional[Sequence[RequestClass]] = None,
+                 cluster: Optional[ClusterSpec] = None,
+                 n_devices: int = 1,
+                 memory_limit_gib: float = 16.0,
+                 device: Optional[DeviceInfo] = None,
+                 search: str = "dfs",
+                 operator_splitting: bool = True,
+                 slice_granularity: int = 4,
+                 force_mode: Optional[str] = None,
+                 max_slots: int = 512,
+                 replica_candidates: Optional[Sequence[int]] = None,
+                 strategy: str = "slo") -> FleetPlan:
+    """Search a fleet-scale serving configuration (multi-replica OSDP).
+
+    Partitions the `cluster` (one pool per heterogeneous
+    `DeviceGroup`, else the whole fleet) into independent replica
+    groups and searches replica count x per-group sharding plan x
+    per-class routing jointly, returning a `FleetPlan`: per-group
+    `ServePlan`s, a class -> group routing table, and per-class
+    admission limits the class-aware router enforces.
+
+    The workload is a `RequestClassMix` (pass `mix`, or `classes` as a
+    sequence of `RequestClass`); `strategy="uniform"` is the
+    heterogeneity-blind baseline (identical replicas, every class
+    routed everywhere) the fleet benchmark compares against."""
+    if mix is None:
+        if not classes:
+            raise TypeError("search_fleet needs mix= or classes=")
+        mix = RequestClassMix(tuple(classes))
+    elif classes:
+        raise TypeError("pass mix= or classes=, not both")
+    if cluster is None:
+        cluster = ClusterSpec.from_device(device or DeviceInfo(),
+                                          n_devices)
+    cfg = OSDPConfig(
+        enabled=True,
+        memory_limit_bytes=memory_limit_gib * 2**30,
+        search=search,
+        operator_splitting=operator_splitting,
+        default_slice_granularity=slice_granularity,
+        checkpointing=False,
+        force_mode=force_mode,
+    )
+    return _search.search_fleet(
+        model, mix, cluster, cfg, max_slots=max_slots,
+        replica_candidates=replica_candidates, strategy=strategy)
 
 
 def rescore_serve(model: ModelConfig, plan: ServePlan,

@@ -31,9 +31,10 @@ Beyond-paper additions, all flagged explicitly:
 from __future__ import annotations
 
 import dataclasses
+import math
 from dataclasses import dataclass
 from functools import cached_property
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -893,6 +894,132 @@ class ServingWorkload:
         return self.prompt_len + self.decode_len
 
 
+@dataclass(frozen=True)
+class RequestClass:
+    """One class of serving traffic: its shape (`prompt_len`,
+    `decode_len`), its offered load (`arrival_rate`, requests/s into
+    the fleet), and its tail-latency targets (`ttft_slo` / `tpot_slo`,
+    seconds; `inf` = no SLO).  A `RequestClassMix` weights several of
+    these; the single-class mix is an exact alias of the legacy
+    `ServingWorkload`."""
+
+    name: str
+    prompt_len: int = 512
+    decode_len: int = 128
+    arrival_rate: float = 1.0
+    ttft_slo: float = math.inf
+    tpot_slo: float = math.inf
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("request class needs a name")
+        if self.prompt_len < 1 or self.decode_len < 1:
+            raise ValueError("class needs prompt_len/decode_len >= 1")
+        if self.arrival_rate <= 0:
+            raise ValueError("class needs arrival_rate > 0")
+        if self.ttft_slo <= 0 or self.tpot_slo <= 0:
+            raise ValueError("SLOs must be positive (inf = none)")
+
+    @property
+    def cache_len(self) -> int:
+        return self.prompt_len + self.decode_len
+
+    def workload(self) -> ServingWorkload:
+        """The class's single-class `ServingWorkload` projection."""
+        return ServingWorkload(self.prompt_len, self.decode_len)
+
+
+@dataclass(frozen=True)
+class RequestClassMix:
+    """Weighted request classes — the fleet-serving workload model.
+
+    Slot occupancy weighting: every admitted sequence shares the same
+    batched decode step, so a class's steady-state share of the slot
+    pool is proportional to `arrival_rate * decode_len` (Little's law
+    with a common per-token service time).  `slot_share` drives both
+    the expected per-slot cache bytes the planner budgets for and the
+    per-class throughput split; with one class every share is exactly
+    1.0, which is what makes the single-class mix an exact alias of
+    `ServingWorkload`."""
+
+    classes: Tuple[RequestClass, ...]
+
+    def __post_init__(self):
+        if not self.classes:
+            raise ValueError("mix needs at least one class")
+        names = [c.name for c in self.classes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate class names: {names}")
+
+    @classmethod
+    def single(cls, prompt_len: int = 512, decode_len: int = 128,
+               name: str = "default", **kw) -> "RequestClassMix":
+        return cls((RequestClass(name, prompt_len, decode_len, **kw),))
+
+    @classmethod
+    def of(cls, workload: "WorkloadLike") -> "RequestClassMix":
+        """Normalize a `ServingWorkload` (or mix) to a mix."""
+        if isinstance(workload, RequestClassMix):
+            return workload
+        return cls.single(workload.prompt_len, workload.decode_len)
+
+    def __len__(self) -> int:
+        return len(self.classes)
+
+    def __iter__(self):
+        return iter(self.classes)
+
+    def __getitem__(self, name: str) -> RequestClass:
+        for c in self.classes:
+            if c.name == name:
+                return c
+        raise KeyError(name)
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(c.name for c in self.classes)
+
+    @property
+    def total_rate(self) -> float:
+        return sum(c.arrival_rate for c in self.classes)
+
+    @property
+    def offered_tokens_per_s(self) -> float:
+        """Decode tokens/s the mix demands at its arrival rates."""
+        return sum(c.arrival_rate * c.decode_len for c in self.classes)
+
+    def slot_share(self, c: Union[RequestClass, str]) -> float:
+        """Class `c`'s steady-state fraction of the slot pool (by
+        object or name)."""
+        if isinstance(c, str):
+            c = self[c]
+        total = sum(k.arrival_rate * k.decode_len for k in self.classes)
+        return c.arrival_rate * c.decode_len / total
+
+    @property
+    def max_cache_len(self) -> int:
+        """Slot sizing: slots must hold the largest class's cache."""
+        return max(c.cache_len for c in self.classes)
+
+    def workload(self) -> ServingWorkload:
+        """Single-class projection (exact only for one class; multi-
+        class mixes project to the worst-case shape for slot sizing)."""
+        if len(self.classes) == 1:
+            return self.classes[0].workload()
+        return ServingWorkload(max(c.prompt_len for c in self.classes),
+                               max(c.decode_len for c in self.classes))
+
+    def subset(self, names: Sequence[str]) -> "RequestClassMix":
+        """The sub-mix of the named classes (shares renormalize)."""
+        keep = tuple(c for c in self.classes if c.name in set(names))
+        if not keep:
+            raise ValueError(f"no classes left from {names}")
+        return RequestClassMix(keep)
+
+
+WorkloadLike = Union[ServingWorkload, RequestClassMix]
+
+
 @dataclass
 class ServingCost:
     """One plan's serving economics at a fixed per-device concurrency."""
@@ -1005,3 +1132,104 @@ def serving_plan_cost(desc_prefill: ModelDescription,
         request_latency=latency,
         throughput=(slots * n * workload.decode_len / latency
                     if latency > 0 else 0.0))
+
+
+@dataclass
+class MixServingCost:
+    """One plan's serving economics under a `RequestClassMix`.
+
+    `per_class` prices each class through the same phase machinery as
+    `serving_plan_cost` — its own prefill shape, the shared batched
+    decode step — with the decode HBM floor and the memory budget
+    charged at the occupancy-weighted *expected* cache bytes
+    (`cache_bytes_per_slot`).  `memory` is the binding (max) per-class
+    figure, so feasibility is judged at the worst phase of the worst
+    class."""
+
+    per_class: Dict[str, ServingCost]
+    slots_per_device: int
+    concurrency: int
+    weight_memory: float
+    cache_bytes_per_slot: float
+    memory: float
+    decode_step_time: float
+    throughput: float             # aggregate output tokens/s
+    offered_tokens_per_s: float   # decode tokens/s the mix demands
+
+    def slo_attained(self, mix: RequestClassMix) -> Dict[str, bool]:
+        """Analytic per-class SLO check: phase latencies within the
+        class targets AND the class's throughput share covers its
+        offered load (otherwise queues grow without bound)."""
+        out = {}
+        for c in mix.classes:
+            sc = self.per_class[c.name]
+            out[c.name] = (sc.ttft <= c.ttft_slo
+                           and sc.tpot <= c.tpot_slo
+                           and sc.throughput + 1e-12
+                           >= c.arrival_rate * c.decode_len)
+        return out
+
+
+def serving_mix_cost(desc_prefills: Dict[int, ModelDescription],
+                     desc_decode: ModelDescription,
+                     decisions: Dict[str, Decision],
+                     mix: RequestClassMix, env: CostEnv,
+                     slots_per_device: int) -> MixServingCost:
+    """Score one sharding plan for serving a `RequestClassMix`.
+
+    `desc_prefills` maps each class's prompt_len to the model described
+    at that prefill shape (`desc_decode` is shared — decode is always
+    seq_len 1).  Every class sees the same decode step (all admitted
+    sequences decode in one batch), floored by streaming the weights
+    plus the *expected* live cache (slot-share weighted over class
+    cache lengths); each class pays its own prefill.  Class throughput
+    is its slot share of the pool.  With a single class every figure
+    reduces exactly to `serving_plan_cost` (share = 1.0)."""
+    if env.train:
+        raise ValueError("serving_mix_cost needs a train=False CostEnv")
+    n = env.n_data
+    slots = max(1, slots_per_device)
+    cache_exp = sum(
+        mix.slot_share(c)
+        * desc_decode.cache_bytes_per_seq(c.cache_len, env.n_tp)
+        for c in mix.classes)
+    dec = plan_cost(desc_decode, decisions, slots * n, env)
+    bw = env.device.hbm_bw
+    reads = weight_read_bytes(desc_decode, env)
+    decode_step = (max(dec.compute_time, (reads + slots * cache_exp) / bw)
+                   + dec.comm_time)
+    weight_mem = plan_weight_bytes(desc_decode, decisions, env)
+    act_dec = inference_act_bytes(desc_decode, env, slots, 1)
+    per_class: Dict[str, ServingCost] = {}
+    for c in mix.classes:
+        desc_pre = desc_prefills[c.prompt_len]
+        pre = plan_cost(desc_pre, decisions, n, env)
+        prefill = max(pre.compute_time, reads / bw) + pre.comm_time
+        latency = prefill + c.decode_len * decode_step
+        act = max(inference_act_bytes(desc_pre, env, 1, c.prompt_len),
+                  act_dec)
+        share = mix.slot_share(c)
+        per_class[c.name] = ServingCost(
+            weight_memory=weight_mem,
+            cache_bytes_per_seq=desc_decode.cache_bytes_per_seq(
+                c.cache_len, env.n_tp),
+            slots_per_device=slots,
+            concurrency=slots * n,
+            memory=weight_mem + act + slots * cache_exp,
+            prefill_time=prefill,
+            decode_step_time=decode_step,
+            ttft=prefill,
+            tpot=decode_step,
+            request_latency=latency,
+            throughput=(share * slots * n * c.decode_len / latency
+                        if latency > 0 else 0.0))
+    return MixServingCost(
+        per_class=per_class,
+        slots_per_device=slots,
+        concurrency=slots * n,
+        weight_memory=weight_mem,
+        cache_bytes_per_slot=cache_exp,
+        memory=max(sc.memory for sc in per_class.values()),
+        decode_step_time=decode_step,
+        throughput=sum(sc.throughput for sc in per_class.values()),
+        offered_tokens_per_s=mix.offered_tokens_per_s)

@@ -69,13 +69,15 @@ from repro.configs.base import (DeviceInfo, MeshConfig, ModelConfig,
 from repro.cluster.topology import ClusterSpec
 from repro.core.cost_model import (DP, MODES, REMAT_INHERIT, REMAT_OFF,
                                    REMAT_ON, ZDP, ZDP_POD, CostEnv,
-                                   Decision, PlanCost, PlanEvaluator,
-                                   ServingCost, ServingWorkload,
+                                   Decision, MixServingCost, PlanCost,
+                                   PlanEvaluator, RequestClass,
+                                   RequestClassMix, ServingCost,
+                                   ServingWorkload, WorkloadLike,
                                    plan_cost, remat_act_saving_slope,
                                    remat_compute_slope, remat_gather_time,
-                                   inference_act_bytes, serving_plan_cost,
-                                   uniform_plan, zdp_extra_time,
-                                   zdp_saving)
+                                   inference_act_bytes, serving_mix_cost,
+                                   serving_plan_cost, uniform_plan,
+                                   zdp_extra_time, zdp_saving)
 from repro.core.descriptions import ModelDescription, OperatorDesc, describe
 from repro.core.ilp import solve_ilp
 from repro.core.hybrid import (Factorization, HybridPlan, factorizations,
@@ -912,6 +914,11 @@ class ServePlan:
     nodes_visited: int = 0
     candidates: List[Tuple[int, float]] = field(default_factory=list)
     inner: Optional[SearchResult] = None
+    # fleet generalization: the mix the plan was searched for and its
+    # exact per-class economics (None on the legacy single-workload
+    # path — a single-class mix routes through that path byte-for-byte)
+    mix: Optional[RequestClassMix] = None
+    class_costs: Optional[Dict[str, ServingCost]] = None
 
     def summary(self) -> str:
         c = self.cost
@@ -937,7 +944,7 @@ class ServePlan:
         ])
 
 
-def search_serve(model: ModelConfig, workload: ServingWorkload,
+def search_serve(model: ModelConfig, workload: WorkloadLike,
                  env: CostEnv, osdp: OSDPConfig, max_slots: int = 512,
                  slot_candidates: Optional[Sequence[int]] = None
                  ) -> ServePlan:
@@ -955,6 +962,11 @@ def search_serve(model: ModelConfig, workload: ServingWorkload,
     argmax plus the largest feasible concurrency (the admission
     limit).  Without explicit `slot_candidates` the sweep doubles
     until infeasible, then bisects the frontier.
+
+    `workload` may also be a `RequestClassMix`: a single-class mix is
+    an exact alias of its `ServingWorkload` (same path, byte-identical
+    plan); a multi-class mix prices every probe per class through
+    `serving_mix_cost` and keeps the aggregate-throughput argmax.
     """
     t0 = _time.perf_counter()
     if env.train:
@@ -966,6 +978,13 @@ def search_serve(model: ModelConfig, workload: ServingWorkload,
     if osdp.selective_remat:
         raise ValueError("serving has no backward pass to rematerialize: "
                          "use checkpointing=False")
+    mix: Optional[RequestClassMix] = None
+    if isinstance(workload, RequestClassMix):
+        mix = workload
+        if len(mix) > 1:
+            return _search_serve_mix(model, mix, env, osdp, max_slots,
+                                     slot_candidates)
+        workload = mix.classes[0].workload()
     pre_shape = ShapeConfig("serve_prefill", workload.prompt_len,
                             env.n_data, "prefill")
     dec_shape = ShapeConfig("serve_decode", 1, env.n_data, "decode")
@@ -1066,10 +1085,154 @@ def search_serve(model: ModelConfig, workload: ServingWorkload,
         nodes_visited=nodes,
         candidates=sorted((s, evals[s][2].throughput if evals[s][3]
                            else 0.0) for s in evals),
-        inner=res)
+        inner=res,
+        mix=mix,
+        class_costs=({mix.classes[0].name: sc} if mix is not None
+                     else None))
 
 
-def rescore_serve_plan(model: ModelConfig, workload: ServingWorkload,
+def _blend_mix_cost(mix: RequestClassMix,
+                    mc: MixServingCost) -> ServingCost:
+    """Aggregate display `ServingCost` for a mix plan: latency figures
+    are arrival-rate weighted means, throughput/memory the aggregate /
+    binding figures (exact per-class numbers live in
+    `ServePlan.class_costs`)."""
+    total = mix.total_rate
+    w = {c.name: c.arrival_rate / total for c in mix.classes}
+
+    def mean(attr):
+        return sum(w[n] * getattr(sc, attr)
+                   for n, sc in mc.per_class.items())
+
+    return ServingCost(
+        weight_memory=mc.weight_memory,
+        cache_bytes_per_seq=mc.cache_bytes_per_slot,
+        slots_per_device=mc.slots_per_device,
+        concurrency=mc.concurrency,
+        memory=mc.memory,
+        prefill_time=mean("prefill_time"),
+        decode_step_time=mc.decode_step_time,
+        ttft=mean("ttft"),
+        tpot=mc.decode_step_time,
+        request_latency=mean("request_latency"),
+        throughput=mc.throughput)
+
+
+def _search_serve_mix(model: ModelConfig, mix: RequestClassMix,
+                      env: CostEnv, osdp: OSDPConfig, max_slots: int,
+                      slot_candidates: Optional[Sequence[int]]
+                      ) -> ServePlan:
+    """The multi-class body of `search_serve`: same sweep, but every
+    probe folds the *expected* (slot-share weighted) cache bytes into
+    the solver limit and is priced per class with `serving_mix_cost`;
+    the argmax is the aggregate output-token throughput."""
+    t0 = _time.perf_counter()
+    dec_shape = ShapeConfig("serve_decode", 1, env.n_data, "decode")
+    desc_dec = describe(model, dec_shape)
+    desc_pres: Dict[int, ModelDescription] = {}
+    for c in mix.classes:
+        if c.prompt_len not in desc_pres:
+            desc_pres[c.prompt_len] = describe(
+                model, ShapeConfig("serve_prefill", c.prompt_len,
+                                   env.n_data, "prefill"))
+    limit = env.topo.memory_limit(osdp.memory_limit_bytes)
+    cache_exp = sum(
+        mix.slot_share(c)
+        * desc_dec.cache_bytes_per_seq(c.cache_len, env.n_tp)
+        for c in mix.classes)
+
+    ctx = None if osdp.force_mode else _SearchContext(desc_dec, env, osdp)
+    base_limit = ctx.limit if ctx is not None else limit
+    act_ev_slope = (desc_dec.resident_act_bytes_per_token
+                    + sum(op.act_bytes_per_token
+                          for op in desc_dec.operators)) / env.n_tp
+    nodes = 0
+    evals: Dict[int, Tuple[Dict[str, Decision], Optional[SearchResult],
+                           MixServingCost, bool]] = {}
+
+    def probe(slots: int):
+        nonlocal nodes
+        if slots in evals:
+            return evals[slots]
+        if ctx is None:
+            g = (osdp.default_slice_granularity
+                 if osdp.operator_splitting else 1)
+            decisions = uniform_plan(desc_dec, osdp.force_mode, g)
+            res = None
+        else:
+            act_inf = inference_act_bytes(desc_dec, env, slots, 1)
+            ctx.limit = max(0.0, base_limit - slots * cache_exp
+                            - act_inf + act_ev_slope * slots)
+            res = ctx.solve(slots * env.n_data)
+            decisions = res.decisions
+            nodes += res.nodes_visited
+        mc = serving_mix_cost(desc_pres, desc_dec, decisions, mix, env,
+                              slots)
+        ok = mc.memory <= limit
+        evals[slots] = (decisions, res, mc, ok)
+        return evals[slots]
+
+    probed: List[int] = []
+    if slot_candidates is not None:
+        probed = sorted({max(1, int(s)) for s in slot_candidates})
+        for s in probed:
+            probe(s)
+    else:
+        s, last_ok, first_bad = 1, 0, None
+        while s <= max_slots:
+            probed.append(s)
+            if probe(s)[3]:
+                last_ok = s
+            else:
+                first_bad = s
+                break
+            s *= 2
+        if first_bad is None and probed and probed[-1] != max_slots:
+            probed.append(max_slots)
+            if probe(max_slots)[3]:
+                last_ok = max_slots
+            else:
+                first_bad = max_slots
+        if first_bad is not None and last_ok:
+            lo, hi = last_ok, first_bad
+            while hi - lo > 1:
+                mid = (lo + hi) // 2
+                probed.append(mid)
+                if probe(mid)[3]:
+                    lo = mid
+                else:
+                    hi = mid
+
+    if ctx is not None:
+        ctx.limit = base_limit
+    feas = [s for s in evals if evals[s][3]]
+    max_feas = max(feas) if feas else 0
+    if feas:
+        best_slots = max(feas, key=lambda s: evals[s][2].throughput)
+        feasible = True
+    else:
+        best_slots = min(evals)
+        feasible = False
+    decisions, res, mc, _ = evals[best_slots]
+    return ServePlan(
+        model_name=model.name, workload=mix.workload(),
+        decisions=decisions, cost=_blend_mix_cost(mix, mc),
+        slots_per_device=best_slots if feasible else 0,
+        max_slots_per_device=max_feas,
+        max_concurrency=max_feas * env.n_data,
+        feasible=feasible,
+        solver=(f"forced:{osdp.force_mode}" if osdp.force_mode
+                else osdp.search),
+        search_seconds=_time.perf_counter() - t0,
+        nodes_visited=nodes,
+        candidates=sorted((s, evals[s][2].throughput if evals[s][3]
+                           else 0.0) for s in evals),
+        inner=res,
+        mix=mix,
+        class_costs=dict(mc.per_class))
+
+
+def rescore_serve_plan(model: ModelConfig, workload: WorkloadLike,
                        decisions: Dict[str, Decision], env: CostEnv,
                        osdp: OSDPConfig, slots: int
                        ) -> Tuple[ServingCost, bool]:
@@ -1081,7 +1244,26 @@ def rescore_serve_plan(model: ModelConfig, workload: ServingWorkload,
     verbatim on the degraded `CostEnv` (whose `topo.memory_limit` has
     typically tightened) to decide whether the survivors can keep
     running it, or whether a fresh `search_serve` is required.  No
-    solver runs: only the analytical cost model."""
+    solver runs: only the analytical cost model.
+
+    A multi-class `RequestClassMix` re-scores through
+    `serving_mix_cost` (returning the blended aggregate cost); a
+    single-class mix is the exact `ServingWorkload` alias."""
+    if isinstance(workload, RequestClassMix):
+        if len(workload) > 1:
+            dec_shape = ShapeConfig("serve_decode", 1, env.n_data,
+                                    "decode")
+            desc_dec = describe(model, dec_shape)
+            desc_pres = {
+                c.prompt_len: describe(model, ShapeConfig(
+                    "serve_prefill", c.prompt_len, env.n_data,
+                    "prefill"))
+                for c in workload.classes}
+            limit = env.topo.memory_limit(osdp.memory_limit_bytes)
+            mc = serving_mix_cost(desc_pres, desc_dec, decisions,
+                                  workload, env, max(1, int(slots)))
+            return _blend_mix_cost(workload, mc), mc.memory <= limit
+        workload = workload.classes[0].workload()
     pre_shape = ShapeConfig("serve_prefill", workload.prompt_len,
                             env.n_data, "prefill")
     dec_shape = ShapeConfig("serve_decode", 1, env.n_data, "decode")
@@ -1091,6 +1273,292 @@ def rescore_serve_plan(model: ModelConfig, workload: ServingWorkload,
     sc = serving_plan_cost(desc_pre, desc_dec, decisions, workload,
                            env, max(1, int(slots)))
     return sc, sc.memory <= limit
+
+
+# ---------------------------------------------------------------------------
+# Fleet Scheduler: replica count x per-group plan x per-class routing
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ReplicaGroup:
+    """`n_replicas` identical serving replicas carved out of one pool
+    (a heterogeneous `DeviceGroup`, or the whole uniform fleet), each
+    running `plan` on the `cluster` sub-spec and serving the named
+    request classes."""
+
+    name: str
+    n_replicas: int
+    devices_per_replica: int
+    cluster: ClusterSpec
+    plan: ServePlan
+    classes: Tuple[str, ...]
+
+    @property
+    def capacity_tokens_per_s(self) -> float:
+        """Aggregate planned output tokens/s across the replicas."""
+        return self.n_replicas * self.plan.cost.throughput
+
+    def class_capacity(self, name: str) -> float:
+        """Planned output tokens/s the group allots to one class."""
+        if self.plan.class_costs and name in self.plan.class_costs:
+            return (self.n_replicas
+                    * self.plan.class_costs[name].throughput)
+        return self.capacity_tokens_per_s if name in self.classes else 0.0
+
+
+@dataclass
+class FleetPlan:
+    """A searched fleet configuration: replica groups (each with its
+    own `ServePlan`), a class -> group routing table, and per-class
+    admission limits (max in-flight + queued requests fleet-wide —
+    2x the planned steady-state slot allocation).
+
+    `goodput` is the planned satisfied load Σ_c min(offered_c,
+    capacity_c) in output tokens/s; `slo_attained` is the analytic
+    per-class check (phase latencies within target AND capacity covers
+    the offered load).  The traffic simulator
+    (`repro.serving.simulator`) is the measured-under-load validator
+    of both claims."""
+
+    model_name: str
+    mix: RequestClassMix
+    cluster: ClusterSpec
+    strategy: str                       # "slo" | "uniform"
+    groups: List[ReplicaGroup]
+    routing: Dict[str, Dict[str, float]]
+    admission: Dict[str, int]
+    slo_attained: Dict[str, bool]
+    feasible: bool
+    throughput: float
+    goodput: float
+    search_seconds: float
+
+    @property
+    def n_replicas(self) -> int:
+        return sum(g.n_replicas for g in self.groups)
+
+    @property
+    def n_slo_attained(self) -> int:
+        return sum(1 for ok in self.slo_attained.values() if ok)
+
+    def summary(self) -> str:
+        lines = [
+            f"fleet-plan[{self.model_name} {self.strategy}] "
+            f"{self.n_replicas} replicas in {len(self.groups)} groups "
+            f"({'feasible' if self.feasible else 'INFEASIBLE'}), "
+            f"SLO {self.n_slo_attained}/{len(self.mix)} classes",
+            f"  planned capacity = {self.throughput:.0f} tok/s, "
+            f"satisfied load = {self.goodput:.0f} of "
+            f"{self.mix.offered_tokens_per_s:.0f} tok/s offered",
+        ]
+        for g in self.groups:
+            lines.append(
+                f"  group {g.name}: {g.n_replicas} x "
+                f"{g.devices_per_replica} devices, "
+                f"{g.plan.max_slots_per_device} slots/device, "
+                f"classes [{', '.join(g.classes)}], "
+                f"{g.capacity_tokens_per_s:.0f} tok/s")
+        adm = ", ".join(f"{k}<={v}" for k, v in self.admission.items())
+        lines.append(f"  admission (in-flight + queued): {adm}")
+        return "\n".join(lines)
+
+
+def _fleet_pools(cluster: ClusterSpec
+                 ) -> List[Tuple[str, ClusterSpec]]:
+    """Partition a fleet into uniform pools: one per heterogeneous
+    `DeviceGroup` (groups split at the outermost level, so each pool
+    keeps the inner levels and scales the outer fan-out), or the whole
+    cluster when it is already uniform."""
+    if not cluster.groups:
+        return [("fleet", cluster)]
+    inner = math.prod(l.ways for l in cluster.levels[:-1])
+    pools = []
+    for g in cluster.groups:
+        dev = dataclasses.replace(cluster.device, hbm_bytes=g.hbm_bytes)
+        if g.peak_flops > 0:
+            dev = dataclasses.replace(dev, peak_flops=g.peak_flops)
+        if inner > 0 and g.n_devices % inner == 0 \
+                and g.n_devices >= inner:
+            levels = cluster.levels[:-1] + (dataclasses.replace(
+                cluster.levels[-1], ways=g.n_devices // inner),)
+        else:
+            # the group does not tile the inner levels: flatten it
+            levels = (dataclasses.replace(cluster.levels[0],
+                                          ways=g.n_devices),)
+        pools.append((g.name, ClusterSpec(levels=tuple(levels),
+                                          device=dev)))
+    return pools
+
+
+def _replica_counts(pool: ClusterSpec,
+                    candidates: Optional[Sequence[int]]) -> List[int]:
+    """Admissible replica counts for a pool: the requested candidates
+    (or powers of two up to the pool size) that `consume_outer`
+    accepts — replicas are independent engines, so they split at the
+    outermost level like pipeline stages."""
+    if candidates is None:
+        cands, r = [], 1
+        while r <= pool.n_devices:
+            cands.append(r)
+            r *= 2
+    else:
+        cands = sorted({int(r) for r in candidates if r >= 1})
+    out = []
+    for r in cands:
+        if r > pool.n_devices or pool.n_devices % r:
+            continue
+        try:
+            pool.consume_outer(r)
+        except ValueError:
+            continue
+        out.append(r)
+    return out or [1]
+
+
+def search_fleet(model: ModelConfig, mix: WorkloadLike,
+                 cluster: ClusterSpec, osdp: OSDPConfig, *,
+                 max_slots: int = 512,
+                 replica_candidates: Optional[Sequence[int]] = None,
+                 strategy: str = "slo") -> FleetPlan:
+    """Search the fleet plan space: replica count x per-group plan x
+    per-class routing/admission.
+
+    The fleet is first partitioned into uniform pools (one per
+    heterogeneous `DeviceGroup`, else the whole cluster); each pool
+    may be split into `r` independent replicas (`consume_outer`, like
+    pipeline stages — no collectives cross replicas).  The search then
+    enumerates class -> pool assignments; every (pool, replica count,
+    class subset) combination reuses `search_serve` on the
+    per-replica sub-spec with the sub-mix routed there, and the winner
+    maximizes (feasibility, #SLO-attained classes, satisfied load,
+    capacity).
+
+    `strategy="uniform"` is the baseline the fleet benchmark compares
+    against: the whole cluster is split into identical replicas, every
+    class routed everywhere — heterogeneity is ignored, so planning is
+    bound by the worst group's memory and long-prompt classes share
+    slots with latency-critical ones.  `strategy="slo"` plans each
+    pool at its real budget and routes classes to the groups that can
+    hold their SLOs."""
+    t0 = _time.perf_counter()
+    mix = RequestClassMix.of(mix)
+    if strategy not in ("slo", "uniform"):
+        raise ValueError(f"unknown fleet strategy {strategy!r}")
+    if strategy == "uniform":
+        pools = [("uniform", cluster)]
+        assignments = [tuple(0 for _ in mix.classes)]
+    else:
+        pools = _fleet_pools(cluster)
+        n_pools = len(pools)
+        assignments = [(0,) * len(mix)] if n_pools == 1 else [
+            tuple(a) for a in _np_cartesian(n_pools, len(mix))]
+
+    offered = {c.name: c.arrival_rate * c.decode_len
+               for c in mix.classes}
+    pool_osdp = []
+    for name, spec in pools:
+        limit = (spec.device.hbm_bytes if cluster.groups
+                 and strategy == "slo"
+                 else osdp.memory_limit_bytes)
+        pool_osdp.append(dataclasses.replace(
+            osdp, memory_limit_bytes=limit))
+
+    plan_cache: Dict[Tuple, ServePlan] = {}
+
+    def pool_plan(pi: int, r: int, names: Tuple[str, ...]) -> ServePlan:
+        key = (pi, r, names)
+        if key not in plan_cache:
+            rep = pools[pi][1].consume_outer(r)
+            env = CostEnv(rep.device, None, checkpointing=False,
+                          train=False, cluster=rep)
+            plan_cache[key] = search_serve(
+                model, mix.subset(names), env, pool_osdp[pi],
+                max_slots=max_slots)
+        return plan_cache[key]
+
+    best = None        # (score, groups, routing, slo, thr, good, feas)
+    for assign in assignments:
+        by_pool: Dict[int, List[str]] = {}
+        for ci, pi in enumerate(assign):
+            by_pool.setdefault(pi, []).append(mix.classes[ci].name)
+        groups: List[ReplicaGroup] = []
+        slo: Dict[str, bool] = {}
+        cap: Dict[str, float] = {}
+        feas = True
+        for pi, names in sorted(by_pool.items()):
+            pname, pspec = pools[pi]
+            names_t = tuple(names)
+            sub = mix.subset(names_t)
+            best_r = None
+            for r in _replica_counts(pspec, replica_candidates):
+                plan = pool_plan(pi, r, names_t)
+                if not plan.feasible:
+                    continue
+                costs = plan.class_costs or {}
+                r_slo, r_cap = {}, {}
+                for c in sub.classes:
+                    sc = costs.get(c.name, plan.cost)
+                    r_cap[c.name] = r * sc.throughput
+                    r_slo[c.name] = (
+                        sc.ttft <= c.ttft_slo
+                        and sc.tpot <= c.tpot_slo
+                        and r_cap[c.name] + 1e-12 >= offered[c.name])
+                score = (sum(r_slo.values()),
+                         sum(min(offered[n], r_cap[n]) for n in names),
+                         sum(r_cap.values()))
+                if best_r is None or score > best_r[0]:
+                    best_r = (score, r, plan, r_slo, r_cap)
+            if best_r is None:
+                # nothing fits this pool: keep the r=1 repair plan
+                plan = pool_plan(pi, 1, names_t)
+                groups.append(ReplicaGroup(
+                    pname, 1, pspec.n_devices, pspec.consume_outer(1),
+                    plan, names_t))
+                for n in names:
+                    slo[n], cap[n] = False, 0.0
+                feas = False
+                continue
+            _, r, plan, r_slo, r_cap = best_r
+            groups.append(ReplicaGroup(
+                pname, r, pspec.n_devices // r, pspec.consume_outer(r),
+                plan, names_t))
+            slo.update(r_slo)
+            cap.update(r_cap)
+        thr = sum(g.capacity_tokens_per_s for g in groups
+                  if g.plan.feasible)
+        good = sum(min(offered[n], cap[n]) for n in offered)
+        score = (feas, sum(slo.values()), good, thr)
+        if best is None or score > best[0]:
+            routing = {c.name: {g.name: 1.0 for g in groups
+                                if c.name in g.classes}
+                       for c in mix.classes}
+            best = (score, groups, routing, slo, thr, good, feas)
+
+    _, groups, routing, slo, thr, good, feas = best
+    admission: Dict[str, int] = {}
+    for c in mix.classes:
+        alloc = 0.0
+        for g in groups:
+            if c.name not in g.classes:
+                continue
+            sub = RequestClassMix(tuple(
+                k for k in mix.classes if k.name in g.classes))
+            alloc += (g.n_replicas * g.plan.max_concurrency
+                      * sub.slot_share(c))
+        admission[c.name] = max(1, int(math.ceil(2.0 * alloc)))
+    return FleetPlan(
+        model_name=model.name, mix=mix, cluster=cluster,
+        strategy=strategy, groups=groups, routing=routing,
+        admission=admission, slo_attained=slo, feasible=feas,
+        throughput=thr, goodput=good,
+        search_seconds=_time.perf_counter() - t0)
+
+
+def _np_cartesian(n_pools: int, n_classes: int):
+    """All class -> pool assignments (n_pools ** n_classes tuples)."""
+    grids = np.meshgrid(*([np.arange(n_pools)] * n_classes),
+                        indexing="ij")
+    return np.stack([g.ravel() for g in grids], axis=1)
 
 
 # ---------------------------------------------------------------------------

@@ -11,6 +11,19 @@ mesh with OSDP disabled and the static batch engine.
         --prompt-len 64 --new-tokens 32 --requests 8
     python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
         --no-plan --batch 4 --prompt-len 64 --new-tokens 32
+
+`--fleet` switches to multi-replica planning (`search_fleet`): the
+cluster is partitioned into replica groups for a request-class mix
+(`--classes name:prompt:decode:rate[:ttft_slo[:tpot_slo]],...`), and
+with `--reduced` the plan is exercised by the deterministic traffic
+simulator — one reduced-model engine per group, seeded `--arrival`
+poisson traffic (or a "tick,class" CSV trace), per-class latency
+percentiles in ticks:
+
+    python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
+        --fleet --n-devices 8 --memory-limit-gib 4 \
+        --classes interactive:16:8:4:0.05:0.02,batch:64:32:0.5 \
+        --arrival poisson --horizon 48
 """
 from __future__ import annotations
 
@@ -57,6 +70,19 @@ def main(argv=None) -> int:
     ap.add_argument("--mixed", action="store_true",
                     help="mixed decode lengths (every 4th request "
                          "decodes the full --new-tokens, the rest 1/4)")
+    # --- fleet -------------------------------------------------------------
+    ap.add_argument("--fleet", action="store_true",
+                    help="multi-replica planning (search_fleet) + "
+                         "traffic simulation instead of one engine")
+    ap.add_argument("--classes", default=None, metavar="SPEC",
+                    help="request-class mix, comma-separated "
+                         "name:prompt:decode:rate[:ttft_slo[:tpot_slo]] "
+                         "(rates in requests/s at plan scale)")
+    ap.add_argument("--arrival", default="poisson", metavar="KIND",
+                    help="'poisson' (seeded, default) or a CSV trace "
+                         "file of 'tick,class' lines")
+    ap.add_argument("--horizon", type=int, default=64,
+                    help="simulated traffic horizon in ticks")
     # --- hardening ---------------------------------------------------------
     ap.add_argument("--max-queue", type=int, default=-1,
                     help="queue-depth backpressure: REJECT requests "
@@ -78,6 +104,9 @@ def main(argv=None) -> int:
     if not cfg.is_decoder:
         print(f"{cfg.name} is encoder-only; nothing to decode")
         return 1
+
+    if args.fleet:
+        return _serve_fleet(cfg, args)
 
     rng = np.random.default_rng(args.seed)
     if args.no_plan:
@@ -140,6 +169,111 @@ def main(argv=None) -> int:
               f"{r.queue_wait_s * 1e3:.0f} ms, ttft "
               f"{r.ttft_s * 1e3:.0f} ms, latency "
               f"{r.latency_s * 1e3:.0f} ms")
+    return 0
+
+
+DEFAULT_CLASSES = "interactive:16:8:4:0.05:0.02,batch:64:32:0.5"
+
+
+def _parse_classes(spec: str):
+    from repro.core.cost_model import RequestClass, RequestClassMix
+    classes = []
+    for part in spec.split(","):
+        f = part.split(":")
+        if len(f) < 4:
+            raise SystemExit(
+                f"bad class spec {part!r} (want "
+                f"name:prompt:decode:rate[:ttft_slo[:tpot_slo]])")
+        kw = {}
+        if len(f) > 4:
+            kw["ttft_slo"] = float(f[4])
+        if len(f) > 5:
+            kw["tpot_slo"] = float(f[5])
+        classes.append(RequestClass(f[0], int(f[1]), int(f[2]),
+                                    float(f[3]), **kw))
+    return RequestClassMix(tuple(classes))
+
+
+def _serve_fleet(cfg, args) -> int:
+    """Fleet path: search_fleet over the class mix, then (with
+    --reduced) drive the plan with the deterministic traffic
+    simulator — one reduced engine per replica group."""
+    import math
+
+    from repro.core.api import search_fleet
+
+    mix = _parse_classes(args.classes or DEFAULT_CLASSES)
+    device = DeviceInfo.preset(args.device) if args.device else None
+    plan = search_fleet(cfg, mix=mix, n_devices=args.n_devices,
+                        memory_limit_gib=args.memory_limit_gib,
+                        device=device)
+    print(plan.summary())
+    if not plan.feasible:
+        print("fleet plan infeasible: no replica split fits the "
+              "memory limit (shrink the workload or add devices)")
+        return 2
+    if not args.reduced:
+        print("(pass --reduced to exercise the plan with simulated "
+              "traffic through real engines)")
+        return 0
+
+    from repro.serving.simulator import (TrafficSimulator,
+                                         fleet_replicas,
+                                         poisson_arrivals,
+                                         trace_arrivals)
+    run = RunConfig(model=cfg, shape=get_shape("decode_32k"),
+                    mesh=MeshConfig((1, 1), ("data", "model")),
+                    osdp=OSDPConfig(enabled=False))
+    built = build_model(run)
+    params = built.init(jax.random.PRNGKey(args.seed))
+    slots = args.max_slots or 4
+    cache_len = mix.max_cache_len
+
+    def make(_group):
+        return ContinuousEngine(built, params, max_slots=slots,
+                                cache_len=cache_len, max_queue=64,
+                                temperature=args.temperature)
+
+    replicas = fleet_replicas(plan, make, max_replicas_per_group=1)
+    # the planner's 2x-occupancy admission rule at sim scale
+    admission: dict = {}
+    for g in plan.groups:
+        sub = mix.subset(g.classes)
+        for name in g.classes:
+            admission[name] = admission.get(name, 0.0) \
+                + 2.0 * slots * sub.slot_share(name)
+    admission = {k: max(1, math.ceil(v)) for k, v in admission.items()}
+
+    if args.arrival == "poisson":
+        # normalize the plan-scale rates to ~0.5 requests/tick offered
+        scale = 0.5 / mix.total_rate
+        arrivals = poisson_arrivals(
+            mix, horizon=args.horizon, seed=args.seed,
+            rate_scale=scale, cap_scale=max(16.0, scale))
+    else:
+        pairs = []
+        with open(args.arrival) as fh:
+            for line in fh:
+                line = line.strip()
+                if not line or line.startswith("#"):
+                    continue
+                t, name = line.split(",")
+                pairs.append((int(t), name.strip()))
+        arrivals = trace_arrivals(pairs)
+
+    sim = TrafficSimulator(replicas, mix, routing=plan.routing,
+                           admission=admission, seed=args.seed)
+    rep = sim.run(arrivals)
+    print(f"simulated {len(arrivals)} arrivals over {rep.ticks} ticks "
+          f"on {len(replicas)} replicas ({slots} slots each): "
+          f"{rep.completed} completed, "
+          f"{rep.goodput_tokens_per_tick:.2f} tok/tick")
+    for name, cr in sorted(rep.per_class.items()):
+        print(f"  {name}: {cr.completed}/{cr.arrived} ok "
+              f"({cr.rejected} rejected), ttft p50/p99 "
+              f"{cr.ttft_p50:.1f}/{cr.ttft_p99:.1f} ticks, tpot "
+              f"p50/p99 {cr.tpot_p50:.2f}/{cr.tpot_p99:.2f}")
+    print(f"  fingerprint {rep.fingerprint()}")
     return 0
 
 

@@ -248,11 +248,26 @@ class ServeStats:
     @property
     def slot_utilization(self) -> float:
         """Useful decoded tokens / decoded slot-steps: 1.0 means no
-        slot ever decoded a finished or empty sequence."""
+        slot ever decoded a finished or empty sequence.  Clamped at 0
+        — an all-wasted run (every attempt aborted or expired after
+        its prefill) can drive useful below the prefill count."""
         produced = self.decode_steps * self.slots
         # the admission prefill also produces one token per request
-        return ((self.useful_tokens - self.prefill_steps)
-                / max(produced, 1))
+        return max(0.0, (self.useful_tokens - self.prefill_steps)
+                   / max(produced, 1))
+
+    @property
+    def completion_rate(self) -> float:
+        """OK terminals / all terminals (0.0 for an empty run)."""
+        return self.completed / max(self.terminal, 1)
+
+    @property
+    def tokens_per_request(self) -> float:
+        """Useful tokens per OK request (0.0 when nothing completed —
+        all-rejected and empty workloads must not divide by zero)."""
+        if self.completed == 0:
+            return 0.0
+        return self.useful_tokens / self.completed
 
 
 @dataclass
@@ -317,6 +332,7 @@ class ContinuousEngine:
                 caches, one)
 
         self._insert = jax.jit(insert, donate_argnums=(0,))
+        self._active = False
 
     def _mrope_positions(self, t_vec: np.ndarray) -> Optional[jax.Array]:
         if self.built.model.cfg.rope != "mrope":
@@ -348,6 +364,318 @@ class ContinuousEngine:
             admitted_at_step=0, finished_at_step=0, status=status,
             attempts=attempts, error=error)
 
+    # -- incremental session API ---------------------------------------------
+    #
+    # `run` is submit-all-then-drain over these four primitives; the
+    # fleet traffic simulator (`repro.serving.simulator`) interleaves
+    # `submit` and `step` instead, injecting arrivals between engine
+    # iterations on the deterministic engine-step clock.  One iteration
+    # of the legacy serve loop == one `step()` call, so the refactor
+    # leaves every `run` byte-identical (same RNG split order, same
+    # admission order, same terminal states).
+
+    def start(self, seed: int = 0, faults=None) -> None:
+        """Open a serve session: allocate the slot caches and reset the
+        per-run bookkeeping.  `submit`/`step`/`finish` require an open
+        session; `start` on an open session raises."""
+        from repro.resilience.faults import EMPTY_SCHEDULE
+        if self._active:
+            raise RuntimeError("a serve session is already open "
+                               "(call finish() first)")
+        B = self.max_slots
+        self._faults = EMPTY_SCHEDULE if faults is None else faults
+        self._results: List[RequestResult] = []
+        self._n_invalid = self._n_rejected = 0
+        self._queue: deque = deque()
+        self._caches = self.built.model.init_caches(B, self.cache_len)
+        self._key = jax.random.PRNGKey(seed)
+        self._slot_req: List[Optional[Request]] = [None] * B
+        self._slot_t = np.zeros(B, np.int32)    # next decode position
+        self._slot_left = np.zeros(B, np.int64)  # tokens still to decode
+        self._slot_toks: List[List[int]] = [[] for _ in range(B)]
+        self._slot_admit: List[Tuple[float, float, int]] = \
+            [(0.0, 0.0, 0)] * B
+        self._slot_attempt = [1] * B
+        self._slot_fail_at: List[Optional[int]] = [None] * B
+        self._slot_stall = np.zeros(B, np.int64)
+        self._last_tok = np.zeros((B, 1), np.int32)
+        self._prefill_steps = self._decode_steps = 0
+        self._engine_step = self._useful = 0
+        self._wasted = self._retries = 0
+        self._n_timeout = self._n_failed = 0
+        self._t0 = time.perf_counter()
+        self._active = True
+
+    @property
+    def active(self) -> bool:
+        """A serve session is open (between `start` and `finish`)."""
+        return self._active
+
+    @property
+    def engine_step(self) -> int:
+        """The deterministic clock: prefills + decode steps so far."""
+        return self._engine_step if self._active else 0
+
+    @property
+    def load(self) -> int:
+        """Queued + in-flight requests (a router's balance signal)."""
+        if not self._active:
+            return 0
+        return (len(self._queue)
+                + sum(1 for r in self._slot_req if r is not None))
+
+    @property
+    def pending(self) -> bool:
+        """Work remains: queued entries or live slots."""
+        if not self._active:
+            return False
+        return bool(self._queue) or any(r is not None
+                                        for r in self._slot_req)
+
+    def _now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def _require_active(self) -> None:
+        if not self._active:
+            raise RuntimeError("no open serve session (call start())")
+
+    def submit(self, req: Request) -> Optional[RequestResult]:
+        """Enqueue one request into the open session.  Returns the
+        terminal `RequestResult` immediately for INVALID / REJECTED
+        (backpressure) requests, None when the request was queued."""
+        self._require_active()
+        B = self.max_slots
+        capacity = (None if self.max_queue is None
+                    else B + self.max_queue)
+        err = self._validate(req)
+        if err is not None:
+            res = self._unserved(req, INVALID, err)
+            self._results.append(res)
+            self._n_invalid += 1
+            return res
+        if capacity is not None and len(self._queue) >= capacity:
+            res = self._unserved(
+                req, REJECTED,
+                f"backpressure: {len(self._queue)} requests already "
+                f"waiting (max_slots {B} + max_queue "
+                f"{self.max_queue})")
+            self._results.append(res)
+            self._n_rejected += 1
+            return res
+        self._queue.append(_Entry(req))
+        return None
+
+    def _finish_slot(self, slot: int, status: str = OK,
+                     error: str = "") -> None:
+        req = self._slot_req[slot]
+        t_adm, t_first, step_adm = self._slot_admit[slot]
+        n_tok = len(self._slot_toks[slot])
+        if status != OK:
+            self._useful -= n_tok
+            self._wasted += n_tok
+            if status == TIMED_OUT:
+                self._n_timeout += 1
+            elif status == FAILED:
+                self._n_failed += 1
+        self._results.append(RequestResult(
+            rid=req.rid, prompt_len=len(req.prompt),
+            tokens=np.asarray(self._slot_toks[slot], np.int32),
+            t_enqueued=0.0, t_admitted=t_adm, t_first_token=t_first,
+            t_finished=self._now(), admitted_at_step=step_adm,
+            finished_at_step=self._engine_step, status=status,
+            attempts=self._slot_attempt[slot], error=error))
+        self._slot_req[slot] = None
+        self._slot_toks[slot] = []
+
+    def _abort_slot(self, slot: int) -> None:
+        """Transient failure of the slot's current attempt: requeue
+        with backoff, or FAILED when retries are spent."""
+        req = self._slot_req[slot]
+        attempt = self._slot_attempt[slot]
+        if attempt <= self.max_retries:
+            n_tok = len(self._slot_toks[slot])
+            self._useful -= n_tok
+            self._wasted += n_tok
+            self._retries += 1
+            self._queue.append(_Entry(
+                req, attempt + 1,
+                self._engine_step
+                + self.backoff_steps * 2 ** (attempt - 1)))
+            self._slot_req[slot] = None
+            self._slot_toks[slot] = []
+        else:
+            self._finish_slot(slot, FAILED,
+                              f"transient failure on attempt {attempt} "
+                              f"(retry budget {self.max_retries} "
+                              f"spent)")
+
+    def _expired(self, req: Request) -> Optional[str]:
+        if (req.deadline_steps is not None
+                and self._engine_step >= req.deadline_steps):
+            return (f"deadline_steps {req.deadline_steps} passed "
+                    f"at engine step {self._engine_step}")
+        if req.timeout_s is not None and self._now() > req.timeout_s:
+            return f"timeout_s {req.timeout_s} passed"
+        return None
+
+    def _pop_admittable(self) -> Optional[_Entry]:
+        """First queued entry whose backoff window opened; expires
+        dead-on-arrival entries along the way.  Entries still
+        backing off rotate to the tail (their FIFO position is
+        already forfeit)."""
+        queue = self._queue
+        for _ in range(len(queue)):
+            ent = queue.popleft()
+            why = self._expired(ent.req)
+            if why is not None:
+                res = self._unserved(ent.req, TIMED_OUT,
+                                     "expired in queue: " + why,
+                                     attempts=ent.attempt - 1)
+                res.t_finished = self._now()
+                res.finished_at_step = self._engine_step
+                self._results.append(res)
+                self._n_timeout += 1
+                continue
+            if ent.not_before <= self._engine_step:
+                return ent
+            queue.append(ent)
+        return None
+
+    def step(self) -> Tuple[List[int], List[RequestResult]]:
+        """One engine iteration: admissions (one prefill per free
+        slot), then one batched decode step.  Returns (rids whose
+        first token was produced this step, results that reached a
+        terminal state this step).  Idle sessions no-op."""
+        from repro.resilience.faults import DeviceLost
+        self._require_active()
+        faults = self._faults
+        cfg = self.built.model.cfg
+        B = self.max_slots
+        queue = self._queue
+        slot_req = self._slot_req
+        if not queue and not any(r is not None for r in slot_req):
+            return [], []
+        n_before = len(self._results)
+        ev = faults.device_loss_at(self._engine_step)
+        if ev is not None:
+            pending = [slot_req[i] for i in range(B)
+                       if slot_req[i] is not None]
+            pending += [e.req for e in queue]
+            stats = self._session_stats()
+            self._active = False
+            raise DeviceLost(ev, self._engine_step,
+                             results=self._results, stats=stats,
+                             pending=pending)
+        eff = B
+        if not faults.empty:
+            eff = max(1, min(B, int(math.ceil(
+                B * faults.slot_factor(self._engine_step)))))
+        # --- admission: one prefill per free slot ----------------------------
+        admitted: List[int] = []
+        n_live = sum(1 for r in slot_req if r is not None)
+        for slot in range(B):
+            if not queue:
+                break
+            if slot_req[slot] is not None:
+                continue
+            if n_live >= eff:
+                break
+            ent = self._pop_admittable()
+            if ent is None:
+                break
+            req = ent.req
+            t_adm = self._now()
+            S = len(req.prompt)
+            logits, one = self._prefill(
+                self.params,
+                {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]})
+            self._caches = self._insert(self._caches, one, slot)
+            self._key, sub = jax.random.split(self._key)
+            tok = np.asarray(_sample(cfg, logits[:, -1], sub,
+                                     self.temperature))
+            self._prefill_steps += 1
+            self._engine_step += 1
+            self._useful += 1
+            n_live += 1
+            admitted.append(req.rid)
+            slot_req[slot] = req
+            self._slot_attempt[slot] = ent.attempt
+            self._slot_fail_at[slot] = faults.fail_after_tokens(
+                req.rid, ent.attempt, req.max_new_tokens)
+            self._slot_stall[slot] = faults.stall_steps(req.rid)
+            self._slot_t[slot] = S
+            self._slot_left[slot] = req.max_new_tokens - 1
+            self._slot_toks[slot] = [int(tok[0, 0])]
+            self._slot_admit[slot] = (t_adm, self._now(),
+                                      self._engine_step)
+            self._last_tok[slot] = tok[0]
+            if (self._slot_fail_at[slot] is not None
+                    and len(self._slot_toks[slot])
+                    >= self._slot_fail_at[slot]):
+                self._abort_slot(slot)
+                n_live -= 1
+            elif self._slot_left[slot] == 0:
+                self._finish_slot(slot)
+                n_live -= 1
+
+        active = [i for i in range(B) if slot_req[i] is not None]
+        if not active:
+            if queue:
+                # every queued entry is backing off: burn one
+                # engine step so their windows eventually open
+                self._engine_step += 1
+            return admitted, list(self._results[n_before:])
+        # --- one batched decode step at per-slot positions -------------------
+        pos3 = self._mrope_positions(self._slot_t)
+        kw = {} if pos3 is None else {"positions3": pos3}
+        logits, self._caches = self._decode(
+            self.params, self._caches, jnp.asarray(self._last_tok),
+            jnp.asarray(self._slot_t), **kw)
+        self._key, sub = jax.random.split(self._key)
+        toks = np.asarray(_sample(cfg, logits[:, 0], sub,
+                                  self.temperature))
+        self._decode_steps += 1
+        self._engine_step += 1
+        for i in active:
+            stalled = self._slot_stall[i] > 0
+            if stalled:
+                # a stuck request burns the step without producing
+                self._slot_stall[i] -= 1
+            else:
+                self._slot_toks[i].append(int(toks[i, 0]))
+                self._slot_t[i] += 1
+                self._slot_left[i] -= 1
+                self._last_tok[i] = toks[i]
+                self._useful += 1
+            if (not stalled and self._slot_fail_at[i] is not None
+                    and len(self._slot_toks[i])
+                    >= self._slot_fail_at[i]):
+                self._abort_slot(i)
+            elif self._slot_left[i] == 0 and not stalled:
+                self._finish_slot(i)
+            else:
+                why = self._expired(slot_req[i])
+                if why is not None:
+                    self._finish_slot(i, TIMED_OUT, why)
+        return admitted, list(self._results[n_before:])
+
+    def _session_stats(self) -> ServeStats:
+        return self._stats(
+            self._now(), self._prefill_steps, self._decode_steps,
+            self._useful, self._results, self._wasted, self._retries,
+            self._n_rejected, self._n_invalid, self._n_timeout,
+            self._n_failed)
+
+    def finish(self) -> Tuple[List[RequestResult], ServeStats]:
+        """Close the session: (results in completion order, stats)."""
+        self._require_active()
+        jax.block_until_ready(self._caches)
+        stats = self._session_stats()
+        results = self._results
+        self._active = False
+        self._caches = None     # free the slot caches
+        return results, stats
+
     def run(self, requests: Sequence[Request], seed: int = 0,
             faults=None) -> Tuple[List[RequestResult], ServeStats]:
         """Serve `requests` (FIFO) to a terminal state each; returns
@@ -358,228 +686,12 @@ class ContinuousEngine:
         injected device loss raises `resilience.faults.DeviceLost`
         carrying the acknowledged results and the pending requests a
         supervisor must re-admit on the replanned engine."""
-        from repro.resilience.faults import DeviceLost, EMPTY_SCHEDULE
-        if faults is None:
-            faults = EMPTY_SCHEDULE
-        cfg = self.built.model.cfg
-        B = self.max_slots
-        results: List[RequestResult] = []
-        n_invalid = n_rejected = 0
-        queue: deque = deque()
-        capacity = (None if self.max_queue is None
-                    else B + self.max_queue)
+        self.start(seed, faults)
         for r in requests:
-            err = self._validate(r)
-            if err is not None:
-                results.append(self._unserved(r, INVALID, err))
-                n_invalid += 1
-            elif capacity is not None and len(queue) >= capacity:
-                results.append(self._unserved(
-                    r, REJECTED,
-                    f"backpressure: {len(queue)} requests already "
-                    f"waiting (max_slots {B} + max_queue "
-                    f"{self.max_queue})"))
-                n_rejected += 1
-            else:
-                queue.append(_Entry(r))
-
-        caches = self.built.model.init_caches(B, self.cache_len)
-        key = jax.random.PRNGKey(seed)
-
-        slot_req: List[Optional[Request]] = [None] * B
-        slot_t = np.zeros(B, np.int32)         # next decode position
-        slot_left = np.zeros(B, np.int64)      # tokens still to decode
-        slot_toks: List[List[int]] = [[] for _ in range(B)]
-        slot_admit: List[Tuple[float, float, int]] = [(0.0, 0.0, 0)] * B
-        slot_attempt = [1] * B
-        slot_fail_at: List[Optional[int]] = [None] * B  # injected abort
-        slot_stall = np.zeros(B, np.int64)     # stalled decode steps left
-        last_tok = np.zeros((B, 1), np.int32)
-        prefill_steps = decode_steps = engine_step = useful = 0
-        wasted = retries = n_timeout = n_failed = 0
-        t0 = time.perf_counter()
-        now = lambda: time.perf_counter() - t0
-
-        def finish(slot: int, status: str = OK, error: str = "") -> None:
-            nonlocal useful, wasted, n_timeout, n_failed
-            req = slot_req[slot]
-            t_adm, t_first, step_adm = slot_admit[slot]
-            n_tok = len(slot_toks[slot])
-            if status != OK:
-                useful -= n_tok
-                wasted += n_tok
-                if status == TIMED_OUT:
-                    n_timeout += 1
-                elif status == FAILED:
-                    n_failed += 1
-            results.append(RequestResult(
-                rid=req.rid, prompt_len=len(req.prompt),
-                tokens=np.asarray(slot_toks[slot], np.int32),
-                t_enqueued=0.0, t_admitted=t_adm, t_first_token=t_first,
-                t_finished=now(), admitted_at_step=step_adm,
-                finished_at_step=engine_step, status=status,
-                attempts=slot_attempt[slot], error=error))
-            slot_req[slot] = None
-            slot_toks[slot] = []
-
-        def abort(slot: int) -> None:
-            """Transient failure of the slot's current attempt:
-            requeue with backoff, or FAILED when retries are spent."""
-            nonlocal useful, wasted, retries
-            req = slot_req[slot]
-            attempt = slot_attempt[slot]
-            if attempt <= self.max_retries:
-                n_tok = len(slot_toks[slot])
-                useful -= n_tok
-                wasted += n_tok
-                retries += 1
-                queue.append(_Entry(
-                    req, attempt + 1,
-                    engine_step
-                    + self.backoff_steps * 2 ** (attempt - 1)))
-                slot_req[slot] = None
-                slot_toks[slot] = []
-            else:
-                finish(slot, FAILED,
-                       f"transient failure on attempt {attempt} "
-                       f"(retry budget {self.max_retries} spent)")
-
-        def expired(req: Request) -> Optional[str]:
-            if (req.deadline_steps is not None
-                    and engine_step >= req.deadline_steps):
-                return (f"deadline_steps {req.deadline_steps} passed "
-                        f"at engine step {engine_step}")
-            if req.timeout_s is not None and now() > req.timeout_s:
-                return f"timeout_s {req.timeout_s} passed"
-            return None
-
-        def pop_admittable() -> Optional[_Entry]:
-            """First queued entry whose backoff window opened; expires
-            dead-on-arrival entries along the way.  Entries still
-            backing off rotate to the tail (their FIFO position is
-            already forfeit)."""
-            nonlocal n_timeout
-            for _ in range(len(queue)):
-                ent = queue.popleft()
-                why = expired(ent.req)
-                if why is not None:
-                    res = self._unserved(ent.req, TIMED_OUT,
-                                         "expired in queue: " + why,
-                                         attempts=ent.attempt - 1)
-                    res.t_finished = now()
-                    res.finished_at_step = engine_step
-                    results.append(res)
-                    n_timeout += 1
-                    continue
-                if ent.not_before <= engine_step:
-                    return ent
-                queue.append(ent)
-            return None
-
-        while queue or any(r is not None for r in slot_req):
-            ev = faults.device_loss_at(engine_step)
-            if ev is not None:
-                pending = [slot_req[i] for i in range(B)
-                           if slot_req[i] is not None]
-                pending += [e.req for e in queue]
-                stats = self._stats(
-                    now(), prefill_steps, decode_steps, useful,
-                    results, wasted, retries, n_rejected, n_invalid,
-                    n_timeout, n_failed)
-                raise DeviceLost(ev, engine_step, results=results,
-                                 stats=stats, pending=pending)
-            eff = B
-            if not faults.empty:
-                eff = max(1, min(B, int(math.ceil(
-                    B * faults.slot_factor(engine_step)))))
-            # --- admission: one prefill per free slot ------------------------
-            n_live = sum(1 for r in slot_req if r is not None)
-            for slot in range(B):
-                if not queue:
-                    break
-                if slot_req[slot] is not None:
-                    continue
-                if n_live >= eff:
-                    break
-                ent = pop_admittable()
-                if ent is None:
-                    break
-                req = ent.req
-                t_adm = now()
-                S = len(req.prompt)
-                logits, one = self._prefill(
-                    self.params,
-                    {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]})
-                caches = self._insert(caches, one, slot)
-                key, sub = jax.random.split(key)
-                tok = np.asarray(_sample(cfg, logits[:, -1], sub,
-                                         self.temperature))
-                prefill_steps += 1
-                engine_step += 1
-                useful += 1
-                n_live += 1
-                slot_req[slot] = req
-                slot_attempt[slot] = ent.attempt
-                slot_fail_at[slot] = faults.fail_after_tokens(
-                    req.rid, ent.attempt, req.max_new_tokens)
-                slot_stall[slot] = faults.stall_steps(req.rid)
-                slot_t[slot] = S
-                slot_left[slot] = req.max_new_tokens - 1
-                slot_toks[slot] = [int(tok[0, 0])]
-                slot_admit[slot] = (t_adm, now(), engine_step)
-                last_tok[slot] = tok[0]
-                if (slot_fail_at[slot] is not None
-                        and len(slot_toks[slot]) >= slot_fail_at[slot]):
-                    abort(slot)
-                    n_live -= 1
-                elif slot_left[slot] == 0:
-                    finish(slot)
-                    n_live -= 1
-
-            active = [i for i in range(B) if slot_req[i] is not None]
-            if not active:
-                if queue:
-                    # every queued entry is backing off: burn one
-                    # engine step so their windows eventually open
-                    engine_step += 1
-                continue
-            # --- one batched decode step at per-slot positions ---------------
-            pos3 = self._mrope_positions(slot_t)
-            kw = {} if pos3 is None else {"positions3": pos3}
-            logits, caches = self._decode(
-                self.params, caches, jnp.asarray(last_tok),
-                jnp.asarray(slot_t), **kw)
-            key, sub = jax.random.split(key)
-            toks = np.asarray(_sample(cfg, logits[:, 0], sub,
-                                      self.temperature))
-            decode_steps += 1
-            engine_step += 1
-            for i in active:
-                stalled = slot_stall[i] > 0
-                if stalled:
-                    # a stuck request burns the step without producing
-                    slot_stall[i] -= 1
-                else:
-                    slot_toks[i].append(int(toks[i, 0]))
-                    slot_t[i] += 1
-                    slot_left[i] -= 1
-                    last_tok[i] = toks[i]
-                    useful += 1
-                if (not stalled and slot_fail_at[i] is not None
-                        and len(slot_toks[i]) >= slot_fail_at[i]):
-                    abort(i)
-                elif slot_left[i] == 0 and not stalled:
-                    finish(i)
-                else:
-                    why = expired(slot_req[i])
-                    if why is not None:
-                        finish(i, TIMED_OUT, why)
-
-        jax.block_until_ready(caches)
-        stats = self._stats(now(), prefill_steps, decode_steps, useful,
-                            results, wasted, retries, n_rejected,
-                            n_invalid, n_timeout, n_failed)
-        return results, stats
+            self.submit(r)
+        while self.pending:
+            self.step()
+        return self.finish()
 
     def _stats(self, wall_s, prefill_steps, decode_steps, useful,
                results, wasted, retries, n_rejected, n_invalid,

@@ -1,0 +1,459 @@
+"""Deterministic fleet traffic simulator.
+
+Drives real `ContinuousEngine` replicas through a class-aware router
+on a discrete tick clock — one tick = one engine iteration per busy
+replica (the engines' own deterministic engine-step clock; zero
+wall-clock dependence).  Arrivals are a seeded Poisson process (or an
+explicit trace) injected between engine steps via the incremental
+`submit`/`step` session API, so every serving claim the planner makes
+analytically (per-class ttft/tpot tails, goodput, SLO attainment,
+admission limits) is measured under load and replayable byte-for-byte
+from (fleet, arrivals, seed).
+
+Determinism mechanics:
+
+  * **Poisson thinning** — `poisson_arrivals` draws each class's
+    candidate arrivals at a fixed cap rate and keeps candidate `i` iff
+    a pure hash of (seed, class, i) falls below `rate_scale /
+    cap_scale`.  The kept process is Poisson at the target rate, and a
+    lower-rate arrival set is a *subset* of a higher-rate one (same
+    seed) — which is what makes "more load never improves latency" a
+    per-request testable property rather than a statistical claim.
+  * **tick clock** — requests are timestamped by the global tick at
+    submission, first token, and completion; ttft/tpot are measured in
+    ticks.  The host clock is never read.
+  * **deterministic routing** — join-shortest-queue over the replicas
+    the routing table allows for the class, load weighted by the
+    routing fraction, ties broken by replica order.
+  * **SLO-aware admission** — per-class outstanding caps (from
+    `FleetPlan.admission`) reject excess arrivals at the router before
+    they ever occupy a queue slot.
+"""
+from __future__ import annotations
+
+import hashlib
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cost_model import RequestClassMix
+from repro.serving.engine import (FAILED, INVALID, OK, REJECTED,
+                                  TIMED_OUT, ContinuousEngine, Request,
+                                  RequestResult, ServeStats)
+
+
+def _unit_hash(*parts) -> float:
+    """Deterministic uniform [0, 1) from arbitrary identifiers (the
+    same idiom as `resilience.faults`)."""
+    key = ":".join(str(p) for p in parts).encode()
+    h = hashlib.blake2b(key, digest_size=8).digest()
+    return int.from_bytes(h, "big") / 2.0 ** 64
+
+
+def _class_seed(seed: int, name: str) -> List[int]:
+    h = hashlib.blake2b(f"{seed}:{name}".encode(),
+                        digest_size=8).digest()
+    return [seed, int.from_bytes(h, "big") % 2 ** 32]
+
+
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Arrival:
+    """One request arrival: the tick it enters the fleet, its class,
+    and a stable identity (`uid`) that survives rate re-scaling — the
+    monotonicity tests compare the same uid across load levels."""
+
+    step: int
+    cls: str
+    uid: str
+
+
+def poisson_arrivals(mix: RequestClassMix, horizon: int, seed: int = 0,
+                     rate_scale: float = 1.0,
+                     cap_scale: float = 16.0) -> List[Arrival]:
+    """Seeded per-class Poisson arrivals over [0, horizon) ticks.
+
+    Class `c` arrives at `c.arrival_rate * rate_scale` requests/tick
+    (the mix's `arrival_rate` is interpreted per tick here; callers
+    map real seconds to ticks via the plan's analytic step time).
+    Thinning construction: candidates at `c.arrival_rate * cap_scale`,
+    kept iff hash(seed, class, i) < rate_scale / cap_scale — so for a
+    fixed seed the arrival set at a lower `rate_scale` is a subset of
+    the set at any higher one."""
+    if horizon < 1:
+        raise ValueError("horizon must be >= 1 tick")
+    if not 0.0 < rate_scale <= cap_scale:
+        raise ValueError(f"need 0 < rate_scale <= cap_scale "
+                         f"({rate_scale} vs {cap_scale})")
+    accept = rate_scale / cap_scale
+    out: List[Arrival] = []
+    for c in mix.classes:
+        rng = np.random.default_rng(_class_seed(seed, c.name))
+        base = c.arrival_rate * cap_scale
+        t, i = 0.0, 0
+        while True:
+            t += rng.exponential(1.0 / base)
+            if t >= horizon:
+                break
+            if _unit_hash(seed, c.name, i) < accept:
+                out.append(Arrival(int(t), c.name, f"{c.name}#{i}"))
+            i += 1
+    out.sort(key=lambda a: (a.step, a.cls, a.uid))
+    return out
+
+
+def trace_arrivals(trace: Sequence[Tuple[int, str]]) -> List[Arrival]:
+    """Explicit (tick, class) pairs — replayed traces."""
+    out = [Arrival(int(t), cls, f"{cls}#t{i}")
+           for i, (t, cls) in enumerate(trace)]
+    out.sort(key=lambda a: (a.step, a.cls, a.uid))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fleet + per-request bookkeeping
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SimReplica:
+    """One serving replica: a live engine plus routing metadata.
+    `classes` empty = serves every class (the uniform baseline)."""
+
+    name: str
+    group: str
+    engine: ContinuousEngine
+    classes: Tuple[str, ...] = ()
+
+    def serves(self, cls: str) -> bool:
+        return not self.classes or cls in self.classes
+
+
+@dataclass
+class RequestTrace:
+    """Tick-clock record of one simulated request."""
+
+    rid: int
+    uid: str
+    cls: str
+    replica: str              # "" when rejected at the router
+    submit_tick: int
+    first_token_tick: int = -1
+    finish_tick: int = -1
+    status: str = ""
+    n_generated: int = 0
+    tokens: Optional[np.ndarray] = None
+    engine_result: Optional[RequestResult] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.status == OK
+
+    @property
+    def ttft_ticks(self) -> float:
+        if self.first_token_tick < 0:
+            return math.inf
+        return float(self.first_token_tick - self.submit_tick)
+
+    @property
+    def tpot_ticks(self) -> float:
+        """Mean ticks per token after the first (0 for one-token
+        requests; inf when no token was ever produced)."""
+        if self.first_token_tick < 0 or self.finish_tick < 0:
+            return math.inf
+        if self.n_generated <= 1:
+            return 0.0
+        return ((self.finish_tick - self.first_token_tick)
+                / (self.n_generated - 1))
+
+
+def _pct(xs: List[float], q: float) -> float:
+    if not xs:
+        return math.inf
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+@dataclass
+class ClassReport:
+    """Measured per-class tails and terminal-state counts."""
+
+    name: str
+    arrived: int
+    completed: int
+    rejected: int
+    timed_out: int
+    failed: int
+    invalid: int
+    ok_tokens: int
+    slo_good_tokens: int      # tokens of OK requests that met the SLO
+    ttft_p50: float
+    ttft_p99: float
+    tpot_p50: float
+    tpot_p99: float
+    slo_attainment: float
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "class": self.name, "arrived": self.arrived,
+            "completed": self.completed, "rejected": self.rejected,
+            "timed_out": self.timed_out, "failed": self.failed,
+            "ok_tokens": self.ok_tokens,
+            "slo_good_tokens": self.slo_good_tokens,
+            "ttft_p50_ticks": round(self.ttft_p50, 3),
+            "ttft_p99_ticks": round(self.ttft_p99, 3),
+            "tpot_p50_ticks": round(self.tpot_p50, 4),
+            "tpot_p99_ticks": round(self.tpot_p99, 4),
+            "slo_attainment": round(self.slo_attainment, 4),
+        }
+
+
+@dataclass
+class FleetReport:
+    """One simulation's outcome: per-request traces, per-class tails,
+    per-replica engine stats, and aggregate goodput."""
+
+    ticks: int
+    requests: List[RequestTrace]
+    per_class: Dict[str, ClassReport]
+    replica_stats: Dict[str, ServeStats]
+
+    @property
+    def ok_tokens(self) -> int:
+        return sum(t.n_generated for t in self.requests if t.ok)
+
+    @property
+    def completed(self) -> int:
+        return sum(1 for t in self.requests if t.ok)
+
+    @property
+    def goodput_tokens_per_tick(self) -> float:
+        return self.ok_tokens / max(self.ticks, 1)
+
+    @property
+    def slo_goodput_tokens_per_tick(self) -> float:
+        """Tokens from requests that completed *within their SLO*, per
+        tick — the serving-literature goodput that an SLO-aware plan
+        optimizes (raw token throughput can reward starving the
+        latency-sensitive class)."""
+        return sum(r.slo_good_tokens
+                   for r in self.per_class.values()) / max(self.ticks, 1)
+
+    @property
+    def slo_attainment(self) -> float:
+        """Arrived-weighted mean attainment across classes."""
+        arrived = sum(r.arrived for r in self.per_class.values())
+        if arrived == 0:
+            return 0.0
+        return sum(r.slo_attainment * r.arrived
+                   for r in self.per_class.values()) / arrived
+
+    def fingerprint(self) -> str:
+        """Digest of every deterministic per-request field — two runs
+        are byte-identical iff their fingerprints match."""
+        h = hashlib.blake2b(digest_size=16)
+        for t in sorted(self.requests, key=lambda t: t.rid):
+            h.update(f"{t.rid}|{t.uid}|{t.cls}|{t.replica}|{t.status}|"
+                     f"{t.submit_tick}|{t.first_token_tick}|"
+                     f"{t.finish_tick}|".encode())
+            if t.tokens is not None:
+                h.update(np.asarray(t.tokens, np.int32).tobytes())
+        return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# the simulator
+# ---------------------------------------------------------------------------
+
+class TrafficSimulator:
+    """Discrete-event fleet simulation over live engine replicas.
+
+    Each tick: (1) arrivals due at the tick are routed — the per-class
+    admission cap may REJECT at the router, otherwise
+    join-shortest-queue picks a replica and the request is submitted
+    into its open engine session; (2) every replica with pending work
+    runs one engine iteration.  The loop is pure data + seeded RNG:
+    same (replicas, mix, routing, admission, arrivals, seed) -> the
+    same `FleetReport.fingerprint()`.
+
+    `routing` maps class -> {replica group: weight} (defaults to every
+    replica whose `classes` allow the class, weight 1).  `admission`
+    caps a class's outstanding (queued + in-flight) requests fleet-
+    wide, `deadline_ticks` bounds a request's lifetime on its
+    replica's engine-step clock, and `slo_ticks` maps class ->
+    (ttft, tpot) tick budgets scored in each `ClassReport`."""
+
+    def __init__(self, replicas: Sequence[SimReplica],
+                 mix: RequestClassMix, *,
+                 routing: Optional[Dict[str, Dict[str, float]]] = None,
+                 admission: Optional[Dict[str, int]] = None,
+                 deadline_ticks: Optional[Dict[str, int]] = None,
+                 slo_ticks: Optional[Dict[str, Tuple[float, float]]]
+                 = None,
+                 seed: int = 0):
+        if not replicas:
+            raise ValueError("need at least one replica")
+        self.replicas = list(replicas)
+        self.mix = mix
+        self.routing = routing
+        self.admission = admission or {}
+        self.deadline_ticks = deadline_ticks or {}
+        self.slo_ticks = slo_ticks or {}
+        self.seed = int(seed)
+        for c in mix.classes:
+            if not any(r.serves(c.name) for r in self.replicas):
+                raise ValueError(f"no replica serves class {c.name!r}")
+
+    # -- routing --------------------------------------------------------------
+
+    def _targets(self, cls: str) -> List[Tuple[SimReplica, float]]:
+        if self.routing is not None and cls in self.routing:
+            weights = self.routing[cls]
+            out = [(r, weights[r.group]) for r in self.replicas
+                   if weights.get(r.group, 0.0) > 0.0 and r.serves(cls)]
+            if out:
+                return out
+        return [(r, 1.0) for r in self.replicas if r.serves(cls)]
+
+    def _pick(self, cls: str) -> SimReplica:
+        """Join-shortest-queue, weighted by the routing fraction."""
+        best, best_key = None, None
+        for i, (r, w) in enumerate(self._targets(cls)):
+            key = (r.engine.load / w, i)
+            if best_key is None or key < best_key:
+                best, best_key = r, key
+        return best
+
+    def _prompt(self, cls: str, uid: str) -> np.ndarray:
+        c = self.mix[cls]
+        vocab = self.replicas[0].engine.built.model.cfg.vocab_size
+        rng = np.random.default_rng(_class_seed(self.seed, uid))
+        return rng.integers(0, vocab, c.prompt_len).astype(np.int32)
+
+    # -- the loop -------------------------------------------------------------
+
+    def run(self, arrivals: Sequence[Arrival],
+            max_ticks: int = 200_000) -> FleetReport:
+        arrivals = sorted(arrivals,
+                          key=lambda a: (a.step, a.cls, a.uid))
+        for a in arrivals:
+            _ = self.mix[a.cls]     # unknown classes fail fast
+        for i, rep in enumerate(self.replicas):
+            rep.engine.start(seed=self.seed + i)
+        traces: List[RequestTrace] = []
+        by_rid: Dict[Tuple[str, int], RequestTrace] = {}
+        outstanding: Dict[str, int] = {c.name: 0
+                                       for c in self.mix.classes}
+        tick = 0
+        idx = 0
+        try:
+            while idx < len(arrivals) or any(r.engine.pending
+                                             for r in self.replicas):
+                if tick >= max_ticks:
+                    break
+                while idx < len(arrivals) \
+                        and arrivals[idx].step <= tick:
+                    a = arrivals[idx]
+                    idx += 1
+                    rid = len(traces)
+                    tr = RequestTrace(rid=rid, uid=a.uid, cls=a.cls,
+                                      replica="", submit_tick=tick)
+                    traces.append(tr)
+                    cap = self.admission.get(a.cls)
+                    if cap is not None and outstanding[a.cls] >= cap:
+                        tr.status = REJECTED
+                        tr.finish_tick = tick
+                        continue
+                    rep = self._pick(a.cls)
+                    tr.replica = rep.name
+                    dl = self.deadline_ticks.get(a.cls)
+                    req = Request(
+                        rid, self._prompt(a.cls, a.uid),
+                        self.mix[a.cls].decode_len,
+                        deadline_steps=(None if dl is None else
+                                        rep.engine.engine_step + dl))
+                    res = rep.engine.submit(req)
+                    if res is not None:     # INVALID / backpressure
+                        self._record(tr, res, tick)
+                    else:
+                        outstanding[a.cls] += 1
+                        by_rid[(rep.name, rid)] = tr
+                for rep in self.replicas:
+                    if not rep.engine.pending:
+                        continue
+                    admitted, finished = rep.engine.step()
+                    for rid in admitted:
+                        tr = by_rid.get((rep.name, rid))
+                        if tr is not None and tr.first_token_tick < 0:
+                            tr.first_token_tick = tick
+                    for res in finished:
+                        tr = by_rid.pop((rep.name, res.rid), None)
+                        if tr is not None:
+                            outstanding[tr.cls] -= 1
+                            self._record(tr, res, tick)
+                tick += 1
+        finally:
+            stats = {}
+            for rep in self.replicas:
+                if rep.engine.active:
+                    _, st = rep.engine.finish()
+                    stats[rep.name] = st
+        per_class = {c.name: self._class_report(c.name, traces)
+                     for c in self.mix.classes}
+        return FleetReport(ticks=tick, requests=traces,
+                           per_class=per_class, replica_stats=stats)
+
+    @staticmethod
+    def _record(tr: RequestTrace, res: RequestResult,
+                tick: int) -> None:
+        tr.status = res.status
+        tr.finish_tick = tick
+        tr.n_generated = res.n_generated
+        tr.tokens = np.asarray(res.tokens, np.int32)
+        tr.engine_result = res
+
+    def _class_report(self, name: str,
+                      traces: List[RequestTrace]) -> ClassReport:
+        mine = [t for t in traces if t.cls == name]
+        ok = [t for t in mine if t.ok]
+        ttfts = [t.ttft_ticks for t in ok]
+        tpots = [t.tpot_ticks for t in ok]
+        slo = self.slo_ticks.get(name)
+        attained = good_tokens = 0
+        for t in ok:
+            if slo is None or (t.ttft_ticks <= slo[0]
+                               and t.tpot_ticks <= slo[1]):
+                attained += 1
+                good_tokens += t.n_generated
+        count = lambda s: sum(1 for t in mine if t.status == s)
+        return ClassReport(
+            name=name, arrived=len(mine), completed=len(ok),
+            rejected=count(REJECTED), timed_out=count(TIMED_OUT),
+            failed=count(FAILED), invalid=count(INVALID),
+            ok_tokens=sum(t.n_generated for t in ok),
+            slo_good_tokens=good_tokens,
+            ttft_p50=_pct(ttfts, 50), ttft_p99=_pct(ttfts, 99),
+            tpot_p50=_pct(tpots, 50), tpot_p99=_pct(tpots, 99),
+            slo_attainment=(attained / len(mine) if mine else 0.0))
+
+
+def fleet_replicas(plan, make_engine, *,
+                   max_replicas_per_group: int = 0
+                   ) -> List[SimReplica]:
+    """Instantiate `SimReplica`s for a `FleetPlan`: one engine per
+    planned replica (capped per group when simulating a scale model of
+    a large fleet), tagged with the group's routed classes so the
+    router honors the plan."""
+    out: List[SimReplica] = []
+    for g in plan.groups:
+        n = g.n_replicas
+        if max_replicas_per_group:
+            n = min(n, max_replicas_per_group)
+        for j in range(n):
+            out.append(SimReplica(
+                name=f"{g.name}/{j}", group=g.name,
+                engine=make_engine(g), classes=tuple(g.classes)))
+    return out

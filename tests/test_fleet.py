@@ -1,0 +1,379 @@
+"""Fleet serving tests (ISSUE 8): multi-replica planning, SLO-aware
+admission, and the deterministic traffic simulator.
+
+Property harness (all deterministic — seeded loops, no wall clock):
+
+  * replay — the same (fleet, arrivals, seed) reproduces the
+    simulation report fingerprint byte-for-byte;
+  * load monotonicity — thinned-Poisson arrival sets nest across rate
+    scales, and on a single FIFO replica a higher arrival rate never
+    improves any common request's ttft (nor the class p99);
+  * capacity monotonicity — adding a replica never reduces aggregate
+    goodput (OK tokens) under deadline overload;
+  * degenerate fleet — a 1-replica/1-class fleet reproduces the
+    `search_serve` plan and per-request `ContinuousEngine.run` results
+    byte-identically;
+  * single-class `RequestClassMix` is an exact alias of the legacy
+    `ServingWorkload` path: the committed BENCH_search.json serving
+    planner rows re-solve byte-identically through the mix path;
+  * `ServeStats` rate guards: empty workloads and all-rejected /
+    all-invalid runs never divide by zero.
+"""
+import json
+import math
+from functools import lru_cache
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_run
+from repro.cluster.topology import mixed_memory_fleet
+from repro.configs import get_arch
+from repro.core.api import search_fleet, search_serve
+from repro.core.cost_model import RequestClass, RequestClassMix
+from repro.models.registry import build_model
+from repro.serving.engine import ContinuousEngine, Request
+from repro.serving.simulator import (SimReplica, TrafficSimulator,
+                                     poisson_arrivals, trace_arrivals)
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+@lru_cache(maxsize=None)
+def _served(arch="qwen1.5-0.5b"):
+    run = tiny_run(arch, shape="decode_32k")
+    built = build_model(run)
+    params = built.init(jax.random.PRNGKey(0))
+    return built, params
+
+
+def _replicas(n, slots=2, cache_len=48, max_queue=None):
+    built, params = _served()
+    return [SimReplica(f"g/{j}", "g",
+                       ContinuousEngine(built, params, max_slots=slots,
+                                        cache_len=cache_len,
+                                        max_queue=max_queue))
+            for j in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+
+MIX2 = RequestClassMix((
+    RequestClass("interactive", prompt_len=8, decode_len=4,
+                 arrival_rate=0.5),
+    RequestClass("batch", prompt_len=16, decode_len=16,
+                 arrival_rate=0.15),
+))
+
+
+def test_poisson_arrivals_deterministic_and_sorted():
+    a = poisson_arrivals(MIX2, horizon=40, seed=3)
+    b = poisson_arrivals(MIX2, horizon=40, seed=3)
+    assert a == b and len(a) > 0
+    assert all(x.step <= y.step for x, y in zip(a, a[1:]))
+    assert {x.cls for x in a} <= {"interactive", "batch"}
+    c = poisson_arrivals(MIX2, horizon=40, seed=4)
+    assert c != a
+
+
+def test_poisson_arrival_sets_nest_across_rate_scales():
+    """Thinning invariant: for a fixed seed, the arrival set at a
+    lower rate is a subset of the set at any higher rate — per
+    request (uid), not just in expectation."""
+    prev = None
+    for scale in (0.25, 0.5, 1.0, 2.0, 4.0):
+        cur = {(x.uid, x.step)
+               for x in poisson_arrivals(MIX2, horizon=60, seed=9,
+                                         rate_scale=scale)}
+        if prev is not None:
+            assert prev <= cur, f"nesting broken at scale {scale}"
+        prev = cur
+
+
+def test_trace_arrivals_sorted_with_stable_uids():
+    arr = trace_arrivals([(5, "b"), (0, "a"), (5, "a")])
+    assert [(x.step, x.cls) for x in arr] == \
+        [(0, "a"), (5, "a"), (5, "b")]
+    assert len({x.uid for x in arr}) == 3
+
+
+# ---------------------------------------------------------------------------
+# replay + load/capacity monotonicity
+# ---------------------------------------------------------------------------
+
+def test_fleet_replay_byte_identical():
+    """Two fresh fleets fed the same arrivals produce byte-identical
+    reports (fingerprint over every per-request field + tokens)."""
+    arrivals = poisson_arrivals(MIX2, horizon=24, seed=7)
+    reports = [
+        TrafficSimulator(_replicas(2), MIX2, seed=5).run(arrivals)
+        for _ in range(2)]
+    assert reports[0].fingerprint() == reports[1].fingerprint()
+    assert reports[0].completed == reports[1].completed > 0
+
+
+MONO_MIX = RequestClassMix((
+    RequestClass("c", prompt_len=8, decode_len=6, arrival_rate=0.25),))
+
+
+def test_higher_arrival_rate_never_improves_ttft():
+    """On a single FIFO replica, extra arrivals can only delay the
+    requests both traces share: per-uid ttft is non-decreasing in the
+    rate scale, and so is the class p99."""
+    results = {}
+    for scale in (0.6, 1.2, 2.4):
+        arrivals = poisson_arrivals(MONO_MIX, horizon=36, seed=13,
+                                    rate_scale=scale, cap_scale=8.0)
+        rep = TrafficSimulator(_replicas(1), MONO_MIX, seed=1) \
+            .run(arrivals)
+        results[scale] = rep
+    scales = sorted(results)
+    for lo, hi in zip(scales, scales[1:]):
+        r_lo, r_hi = results[lo], results[hi]
+        ttft_lo = {t.uid: t.ttft_ticks for t in r_lo.requests}
+        ttft_hi = {t.uid: t.ttft_ticks for t in r_hi.requests}
+        assert set(ttft_lo) <= set(ttft_hi)
+        for uid, v in ttft_lo.items():
+            assert ttft_hi[uid] >= v, (uid, lo, hi)
+        assert (r_hi.per_class["c"].ttft_p99
+                >= r_lo.per_class["c"].ttft_p99)
+    # the overloaded end actually queues (the property is non-vacuous)
+    assert results[2.4].per_class["c"].ttft_p99 > 0.0
+
+
+def test_adding_a_replica_never_reduces_goodput():
+    """Under deadline overload, growing the fleet monotonically grows
+    aggregate goodput (OK tokens) and completions."""
+    mix = RequestClassMix((
+        RequestClass("c", prompt_len=8, decode_len=8,
+                     arrival_rate=0.5),))
+    arrivals = poisson_arrivals(mix, horizon=32, seed=21)
+    toks, done = [], []
+    for n in (1, 2, 3):
+        rep = TrafficSimulator(_replicas(n), mix,
+                               deadline_ticks={"c": 30}, seed=2) \
+            .run(arrivals)
+        toks.append(rep.ok_tokens)
+        done.append(rep.completed)
+    assert toks == sorted(toks), toks
+    assert done == sorted(done), done
+    # overload is real: one replica loses work a bigger fleet serves
+    assert toks[0] < toks[-1]
+
+
+# ---------------------------------------------------------------------------
+# degenerate fleet == search_serve + ContinuousEngine.run
+# ---------------------------------------------------------------------------
+
+def test_degenerate_fleet_plan_matches_search_serve():
+    """A 1-class mix on a homogeneous cluster produces one replica
+    group whose plan is byte-identical to plain `search_serve`."""
+    model = get_arch("qwen1.5-0.5b")
+    fleet = search_fleet(model, classes=[
+        RequestClass("default", prompt_len=128, decode_len=64)],
+        n_devices=1, memory_limit_gib=4.0)
+    solo = search_serve(model, prompt_len=128, decode_len=64,
+                        n_devices=1, memory_limit_gib=4.0)
+    assert len(fleet.groups) == 1
+    g = fleet.groups[0]
+    assert g.n_replicas == 1 and g.classes == ("default",)
+    assert g.plan.decisions == solo.decisions
+    assert g.plan.slots_per_device == solo.slots_per_device
+    assert g.plan.max_concurrency == solo.max_concurrency
+    assert g.plan.cost == solo.cost
+    assert fleet.feasible == solo.feasible
+    assert fleet.routing == {"default": {g.name: 1.0}}
+
+
+def test_degenerate_fleet_sim_matches_engine_run():
+    """1 replica, 1 class, every arrival at tick 0: the simulator is
+    submit-all-then-drain, so per-request engine results (status,
+    tokens, engine-step timestamps) and the engine stats must be
+    byte-identical to a plain `ContinuousEngine.run`."""
+    mix = RequestClassMix((
+        RequestClass("c", prompt_len=8, decode_len=4),))
+    n = 5
+    arrivals = trace_arrivals([(0, "c")] * n)
+    sim = TrafficSimulator(_replicas(1), mix, seed=5)
+    rep = sim.run(arrivals)
+
+    built, params = _served()
+    eng = ContinuousEngine(built, params, max_slots=2, cache_len=48)
+    reqs = [Request(i, sim._prompt("c", arrivals[i].uid), 4)
+            for i in range(n)]
+    results, stats = eng.run(reqs, seed=5)
+
+    by_rid = {t.rid: t for t in rep.requests}
+    assert len(by_rid) == len(results) == n
+    for r in results:
+        t = by_rid[r.rid]
+        er = t.engine_result
+        assert er.status == r.status == "OK"
+        np.testing.assert_array_equal(np.asarray(er.tokens),
+                                      np.asarray(r.tokens))
+        assert er.admitted_at_step == r.admitted_at_step
+        assert er.finished_at_step == r.finished_at_step
+        assert er.attempts == r.attempts
+        assert er.prompt_len == r.prompt_len
+    st = rep.replica_stats["g/0"]
+    for f in ("prefill_steps", "decode_steps", "useful_tokens",
+              "completed", "wasted_tokens", "retries", "rejected",
+              "invalid", "timed_out", "failed", "slots"):
+        assert getattr(st, f) == getattr(stats, f), f
+
+
+# ---------------------------------------------------------------------------
+# single-class mix == legacy workload (exact alias) + BENCH stability
+# ---------------------------------------------------------------------------
+
+def test_single_class_mix_is_exact_alias():
+    model = get_arch("qwen1.5-0.5b")
+    legacy = search_serve(model, prompt_len=128, decode_len=64,
+                          n_devices=1, memory_limit_gib=4.0)
+    mixed = search_serve(model, mix=RequestClassMix.single(128, 64),
+                         n_devices=1, memory_limit_gib=4.0)
+    assert mixed.decisions == legacy.decisions
+    assert mixed.cost == legacy.cost
+    assert mixed.slots_per_device == legacy.slots_per_device
+    assert mixed.max_concurrency == legacy.max_concurrency
+    assert mixed.feasible == legacy.feasible
+    assert mixed.mix is not None and len(mixed.mix) == 1
+    assert mixed.class_costs == {"default": legacy.cost}
+
+
+def test_bench_serving_rows_byte_identical_via_mix():
+    """Re-solve the committed BENCH serving planner rows through the
+    RequestClassMix path and assert the pinned decision metrics are
+    byte-identical — the fleet layer must not move any serving
+    answer."""
+    from repro.configs import DeviceInfo
+    doc = json.loads((ROOT / "BENCH_search.json").read_text())
+    rows = {k: v for k, v in doc["serving"]["rows"].items()
+            if k.startswith("plan-")}
+    assert len(rows) >= 3
+    for name, row in rows.items():
+        device = (DeviceInfo.preset(row["device"])
+                  if row["device"] != "tpu-v5e" else None)
+        plan = search_serve(
+            get_arch(row["model"]),
+            mix=RequestClassMix.single(512 if row["n_devices"] > 1
+                                       else 128,
+                                       128 if row["n_devices"] > 1
+                                       else 64),
+            n_devices=row["n_devices"],
+            memory_limit_gib=row["limit_gib"], device=device)
+        assert plan.feasible == row["planned_feasible"], name
+        assert plan.max_concurrency == row["concurrency"], name
+        assert plan.slots_per_device == row["slots_per_device"], name
+        assert round(plan.cost.tpot * 1e3, 3) == row["tpot_ms"], name
+        assert round(plan.cost.ttft * 1e3, 3) == row["ttft_ms"], name
+        assert round(plan.cost.throughput, 1) == \
+            row["throughput_tok_s"], name
+        assert round(plan.cost.memory / 2**30, 2) == \
+            row["memory_gib"], name
+
+
+# ---------------------------------------------------------------------------
+# fleet planner structure
+# ---------------------------------------------------------------------------
+
+FLEET_MIX = RequestClassMix((
+    RequestClass("interactive", prompt_len=128, decode_len=32,
+                 arrival_rate=8.0, ttft_slo=0.05, tpot_slo=0.02),
+    RequestClass("batch", prompt_len=2048, decode_len=256,
+                 arrival_rate=0.5),
+))
+
+
+def test_search_fleet_heterogeneous_structure():
+    """On a mixed-memory fleet the SLO strategy partitions the classes
+    across device groups; routing covers every class with weights
+    summing to 1, and admission caps are positive."""
+    plan = search_fleet(get_arch("qwen1.5-0.5b"), mix=FLEET_MIX,
+                        cluster=mixed_memory_fleet(8, 4.0, 8, 16.0,
+                                                   pod_size=4),
+                        memory_limit_gib=4.0,
+                        replica_candidates=(1, 2, 4), strategy="slo")
+    assert plan.feasible
+    assert len(plan.groups) >= 2
+    routed = set()
+    for g in plan.groups:
+        assert g.n_replicas >= 1 and g.devices_per_replica >= 1
+        assert g.plan.feasible
+        routed.update(g.classes)
+    assert routed == {"interactive", "batch"}
+    for c in FLEET_MIX.names:
+        weights = plan.routing[c]
+        assert weights and math.isclose(sum(weights.values()), 1.0)
+        assert plan.admission[c] >= 1
+    assert plan.throughput > 0 and plan.goodput > 0
+    assert "fleet-plan" in plan.summary()
+
+
+def test_search_fleet_uniform_is_single_group():
+    plan = search_fleet(get_arch("qwen1.5-0.5b"), mix=FLEET_MIX,
+                        cluster=mixed_memory_fleet(8, 4.0, 8, 16.0,
+                                                   pod_size=4),
+                        memory_limit_gib=4.0,
+                        replica_candidates=(1, 2, 4),
+                        strategy="uniform")
+    assert len(plan.groups) == 1
+    g = plan.groups[0]
+    assert set(g.classes) == {"interactive", "batch"}
+    # uniform replication is bounded by the smallest device's HBM
+    assert g.plan.cost.memory <= 4.0 * 2**30
+
+
+# ---------------------------------------------------------------------------
+# ServeStats guards
+# ---------------------------------------------------------------------------
+
+def test_stats_empty_workload_has_no_rate_blowups():
+    built, params = _served()
+    eng = ContinuousEngine(built, params, max_slots=2, cache_len=16)
+    results, stats = eng.run([])
+    assert results == []
+    assert stats.completed == stats.terminal == 0
+    assert stats.completion_rate == 0.0
+    assert stats.tokens_per_request == 0.0
+    assert stats.goodput_tokens_per_step == 0.0
+    assert stats.slot_utilization == 0.0
+    assert stats.tokens_per_s >= 0.0
+
+
+def test_stats_all_invalid_run():
+    """Every request INVALID (prompt exceeds the cache): terminal
+    counts stay consistent and no rate property divides by zero."""
+    built, params = _served()
+    cfg = built.model.cfg
+    eng = ContinuousEngine(built, params, max_slots=2, cache_len=8)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size, 16)
+                    .astype(np.int32), 4) for i in range(3)]
+    results, stats = eng.run(reqs)
+    assert all(r.status == "INVALID" for r in results)
+    assert stats.completed == 0 and stats.terminal == 3
+    assert stats.completion_rate == 0.0
+    assert stats.tokens_per_request == 0.0
+    assert stats.goodput_tokens_per_step == 0.0
+    assert stats.slot_utilization == 0.0
+
+
+def test_stats_backpressure_rejections_counted():
+    built, params = _served()
+    cfg = built.model.cfg
+    eng = ContinuousEngine(built, params, max_slots=1, cache_len=16,
+                           max_queue=0)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size, 8)
+                    .astype(np.int32), 2) for i in range(3)]
+    results, stats = eng.run(reqs)
+    statuses = sorted(r.status for r in results)
+    assert statuses == ["OK", "REJECTED", "REJECTED"]
+    assert stats.rejected == 2 and stats.completed == 1
+    assert stats.completion_rate == pytest.approx(1 / 3)
+    assert stats.tokens_per_request == 2.0

@@ -1,0 +1,49 @@
+"""Stale-pin detection for the enforced skip/xfail inventory.
+
+conftest.py fails the run when an unpinned skip appears or a pinned
+xfail silently passes; this module closes the remaining gap — pins
+that point at tests which no longer exist.  A renamed module or test
+would otherwise leave a dead entry that quietly sanctions future
+regressions under the old name.
+"""
+import ast
+from pathlib import Path
+
+import conftest
+
+TESTS = Path(__file__).resolve().parent
+
+
+def _test_functions(path: Path) -> set:
+    tree = ast.parse(path.read_text())
+    names = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            names.add(node.name)
+    return names
+
+
+def test_expected_skip_modules_exist():
+    for mod in conftest.EXPECTED_SKIP_MODULES:
+        assert (TESTS / mod).is_file(), \
+            f"EXPECTED_SKIP_MODULES pins missing module {mod}"
+
+
+def test_expected_xfails_resolve():
+    for nodeid in conftest.EXPECTED_XFAILS:
+        mod, _, tail = nodeid.partition("::")
+        path = TESTS / mod
+        assert path.is_file(), f"EXPECTED_XFAILS pins missing {mod}"
+        func = tail.split("::")[-1].split("[")[0]
+        assert func in _test_functions(path), \
+            f"EXPECTED_XFAILS pins missing test {mod}::{func}"
+
+
+def test_inventory_entries_are_test_scoped():
+    """Pins must name test modules/tests, not arbitrary files."""
+    for mod in conftest.EXPECTED_SKIP_MODULES:
+        assert mod.startswith("test_") and mod.endswith(".py"), mod
+    for nodeid in conftest.EXPECTED_XFAILS:
+        mod, _, tail = nodeid.partition("::")
+        assert mod.startswith("test_") and tail.startswith("test"), \
+            nodeid
