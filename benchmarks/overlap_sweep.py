@@ -1,0 +1,222 @@
+"""Overlap sweep — what the serial (no-overlap) cost model costs.
+
+Re-scores model-zoo x topology cases under the two-resource timeline
+model (`ClusterLevel.overlap`, PR: comm/compute overlap).  For each
+case two planners run on the SAME hardware:
+
+  serial  — today's model: every collective serializes with compute
+            (all overlap factors 0);
+  overlap — the timeline model: each level hides `overlap` of its
+            communication under compute, per
+            T = T_comp + sum_l max(0, comm_l - ov_l * T_comp).
+
+Both plans are then re-scored under the *overlap-aware* ground truth,
+so the rows answer: "what did planning against the serial model cost
+on hardware that overlaps?"  Two row kinds show up:
+
+  * flip rows — the overlap-aware planner picks a different plan
+    (bigger batch now that its comm hides, a different remat mix, a
+    different ZDP span) that genuinely beats the serial plan;
+  * tie rows  — the argmin is overlap-invariant (uniform overlap
+    scales every candidate's exposed comm together); throughput still
+    improves, the *decision* doesn't.  Kept honestly as wins=False.
+
+Uniform overlap mostly produces tie rows; the flips come from
+selective-remat spaces (hidden comm frees time the remat search
+re-spends) and per-level differentiated overlap (ICI hides well, DCI
+doesn't — flipping which span ZDP shards over and the batch argmax).
+
+Results land in ``BENCH_search.json`` under ``"overlap"``.
+``--quick`` runs the CI subset; ``--check`` asserts >= 2 flip-win rows
+and the wall-clock ceiling.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Union
+
+from repro.cluster.topology import ClusterSpec, gpu_cluster, tpu_multipod
+from repro.configs import DeviceInfo, OSDPConfig, get_arch, get_shape
+from repro.core.cost_model import CostEnv, PlanEvaluator
+from repro.core.descriptions import ModelDescription, describe
+from repro.core.search import schedule
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_search.json"
+CEILING_S = 150.0          # --check wall-clock ceiling (quick subset)
+EPS = 1e-6                 # strict-win threshold
+
+Overlap = Union[float, Dict[str, float]]
+
+
+def _true_cost(desc: ModelDescription, decisions, batch: int,
+               spec: ClusterSpec, env_ck):
+    """Score a plan under the overlap-aware (or serial) ground truth."""
+    env = CostEnv(spec.device, cluster=spec, checkpointing=env_ck)
+    ev = PlanEvaluator.for_decisions(desc, env, decisions)
+    return ev.plan_cost(ev.modes_from_decisions(decisions), batch)
+
+
+def _plan_sig(plan) -> dict:
+    return {k: (d.modes, d.remat) for k, d in plan.decisions.items()}
+
+
+def _run_case(name: str, desc: ModelDescription, spec: ClusterSpec,
+              limit_bytes: float, batches: List[int], ov: Overlap,
+              selective: bool = False, out=print) -> dict:
+    env_ck = False if selective else True
+    osdp = OSDPConfig(memory_limit_bytes=limit_bytes,
+                      checkpointing="selective" if selective else True)
+    spec_ov = spec.with_overlap(ov)
+    t0 = time.perf_counter()
+    serial = schedule(desc, CostEnv(spec.device, cluster=spec,
+                                    checkpointing=env_ck),
+                      osdp, batch_candidates=batches)
+    over = schedule(desc, CostEnv(spec_ov.device, cluster=spec_ov,
+                                  checkpointing=env_ck),
+                    osdp, batch_candidates=batches)
+    dt = time.perf_counter() - t0
+
+    # ground truth: both plans under the overlap-aware timeline; the
+    # serial plan also under its own (serial) model so the row separates
+    # "overlap sped the same plan up" from "replanning won on top"
+    true_serial = _true_cost(desc, serial.decisions, serial.batch_size,
+                             spec_ov, env_ck)
+    true_over = _true_cost(desc, over.decisions, over.batch_size,
+                           spec_ov, env_ck)
+    serial_own = _true_cost(desc, serial.decisions, serial.batch_size,
+                            spec, env_ck)
+    differs = (serial.batch_size != over.batch_size
+               or _plan_sig(serial) != _plan_sig(over))
+    win = bool(differs
+               and true_over.throughput > true_serial.throughput * (1 + EPS))
+    row = {
+        "kind": "schedule", "cluster": spec.summary(),
+        "model": desc.model.name, "n_devices": spec.n_devices,
+        "overlap": ov, "selective": selective,
+        "serial_batch": serial.batch_size, "overlap_batch": over.batch_size,
+        "serial_model_tok_s": round(serial_own.throughput, 1),
+        "serial_tok_s": round(true_serial.throughput, 1),
+        "overlap_tok_s": round(true_over.throughput, 1),
+        "plan_differs": bool(differs), "overlap_win": win,
+        "seconds": round(dt, 3),
+    }
+    out(f"{name},{desc.model.name},{spec.n_devices},ov={ov},"
+        f"{true_serial.throughput:.0f},{true_over.throughput:.0f},"
+        f"differs={differs},win={win}")
+    return row
+
+
+# --- the sweep ---------------------------------------------------------------
+
+def _cases(quick: bool, device: Optional[str] = None,
+           extra_overlap: Optional[float] = None):
+    """(name, runner) pairs; each runner returns a result row."""
+    dev = DeviceInfo.preset(device) if device else DeviceInfo()
+    a100 = DeviceInfo.preset("a100-80g")
+    h100 = DeviceInfo.preset("h100-sxm")
+    shape = get_shape("train_4k")
+    llama = describe(get_arch("llama3-405b"), shape)
+    arctic = describe(get_arch("arctic-480b"), shape)
+
+    spec_tpu = tpu_multipod(4, 64, dev)
+    spec_spine = gpu_cluster(64, 8, device=h100, nvlink_bw=450e9,
+                             ib_bw=50e9, spine_nodes=8, spine_bw=12.5e9)
+    cases = []
+
+    def add(name, desc, spec, lim_gib, batches, ov, selective=False):
+        cases.append((name, lambda out: _run_case(
+            name, desc, spec, lim_gib * 2**30, batches, ov,
+            selective=selective, out=out)))
+
+    # selective-remat spaces: hidden gather time frees step time the
+    # remat search re-spends on keeping activations -> plan flips at
+    # high overlap even when the factor is uniform
+    for ov in (0.5, 0.9):
+        add(f"tpu-llama405-sel-{ov}", llama, spec_tpu, 100,
+            [128, 256, 512], ov, selective=True)
+        add(f"spine-arctic-sel-{ov}", arctic, spec_spine, 60,
+            [128, 256, 512], ov, selective=True)
+
+    # per-level differentiated overlap on the TPU multipod: hiding only
+    # the intra-pod (ICI) gathers flips the batch argmax; hiding only
+    # the cross-pod (DCI) traffic flips which span ZDP shards over
+    add("tpu-llama405-ici0.9", llama, spec_tpu, 128, [128, 256, 512],
+        {"data": 0.9})
+    add("tpu-llama405-dci0.9", llama, spec_tpu, 128, [128, 256, 512],
+        {"pod": 0.9})
+
+    if not quick:
+        # uniform-overlap tie rows: throughput moves, the argmin
+        # doesn't (uniform hiding scales all candidates together)
+        spec_slow = gpu_cluster(32, 8, device=a100, nvlink_bw=300e9,
+                                ib_bw=12.5e9)
+        for ov in (0.5, 0.9):
+            add(f"spine-arctic-{ov}", arctic, spec_spine, 72,
+                [256, 512, 1024], ov)
+            add(f"slow-llama405-{ov}", llama, spec_slow, 76,
+                [128, 256, 512], ov)
+            add(f"slow-dbrx-sel-{ov}",
+                describe(get_arch("dbrx-132b"), shape), spec_slow, 30,
+                [128, 256, 512], ov, selective=True)
+
+    if extra_overlap is not None:
+        add(f"tpu-llama405-sel-x{extra_overlap}", llama, spec_tpu, 100,
+            [128, 256, 512], float(extra_overlap), selective=True)
+    return cases
+
+
+def main(out=print, quick: bool = False, check: bool = False,
+         json_path: Optional[Path] = None, device: Optional[str] = None,
+         overlap: Optional[float] = None) -> dict:
+    path = Path(json_path) if json_path else JSON_PATH
+    out("case,model,n_devices,overlap,serial_tok_s,overlap_tok_s,notes")
+    t0 = time.perf_counter()
+    rows: Dict[str, dict] = {}
+    for name, runner in _cases(quick, device, overlap):
+        rows[name] = runner(out)
+    elapsed = time.perf_counter() - t0
+
+    flip_wins = sum(1 for r in rows.values() if r["overlap_win"])
+    out(f"# {len(rows)} cases, {flip_wins} overlap plan-flip wins, "
+        f"{elapsed:.1f}s")
+
+    doc = {"schema": 1}
+    if path.exists():
+        doc = json.loads(path.read_text())
+    doc["overlap"] = {"rows": rows, "flip_wins": flip_wins,
+                      "quick": quick, "seconds": round(elapsed, 3)}
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    out(f"# wrote {path}")
+
+    if check:
+        if flip_wins < 2:
+            raise SystemExit(
+                f"overlap-aware planning flipped-and-won only "
+                f"{flip_wins} cases (< 2)")
+        if elapsed > CEILING_S:
+            raise SystemExit(
+                f"sweep took {elapsed:.1f}s (ceiling {CEILING_S:.0f}s)")
+        out("# check passed: >= 2 flip wins, within ceiling")
+    return doc
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI subset (6 cases)")
+    ap.add_argument("--check", action="store_true",
+                    help="assert >= 2 flip wins and the ceiling")
+    ap.add_argument("--json", type=Path, default=None,
+                    help=f"output path (default {JSON_PATH})")
+    ap.add_argument("--device", default=None, metavar="PRESET",
+                    help="base DeviceInfo preset for the TPU fleet "
+                         "(tpu-v5e, tpu-v4, a100-80g, h100-sxm)")
+    ap.add_argument("--overlap", type=float, default=None,
+                    help="extra uniform overlap factor to add to the "
+                         "sweep grid")
+    a = ap.parse_args()
+    main(quick=a.quick, check=a.check, json_path=a.json, device=a.device,
+         overlap=a.overlap)

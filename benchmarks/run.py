@@ -7,11 +7,14 @@
   fig9     checkpointing interaction (OSDP vs FSDP under remat)
   search   search-engine timing (paper: 9–307 s)
   topology flat vs hierarchical ClusterSpec planning (64–512 devices)
+  overlap  serial vs two-resource timeline (comm/compute overlap) planning
   roofline §Roofline table from dry-run records (if present)
 
-`python -m benchmarks.run [section ...] [--device PRESET]` — no
-section args runs everything; `--device` forwards a DeviceInfo preset
-(tpu-v5e, tpu-v4, a100-80g, h100-sxm) to the sections that take one.
+`python -m benchmarks.run [section ...] [--device PRESET] [--overlap F]`
+— no section args runs everything; `--device` forwards a DeviceInfo
+preset (tpu-v5e, tpu-v4, a100-80g, h100-sxm) to the sections that take
+one; `--overlap` forwards an extra uniform overlap factor to the
+overlap sweep.
 """
 from __future__ import annotations
 
@@ -29,14 +32,21 @@ def main(argv=None) -> None:
                              "(tpu-v5e, tpu-v4, a100-80g, h100-sxm)")
         device = argv[i + 1]
         del argv[i:i + 2]
+    overlap = None
+    if "--overlap" in argv:
+        i = argv.index("--overlap")
+        if i + 1 >= len(argv):
+            raise SystemExit("--overlap needs a factor in [0, 1]")
+        overlap = float(argv[i + 1])
+        del argv[i:i + 2]
     args = argv or [
         "table1", "fig5", "hybrid3d", "fig7", "fig8", "fig9", "search",
-        "topology", "auto_g", "roofline"]
+        "topology", "overlap", "auto_g", "roofline"]
     from benchmarks import (auto_granularity, fig5_end_to_end,
                             fig7_operator_splitting,
                             fig8_splitting_throughput, fig9_checkpointing,
-                            hybrid_3d, roofline_report, search_time,
-                            table1_models, topology_sweep)
+                            hybrid_3d, overlap_sweep, roofline_report,
+                            search_time, table1_models, topology_sweep)
     sections = {
         "table1": table1_models.main,
         "fig5": fig5_end_to_end.main,     # includes fig6
@@ -46,10 +56,11 @@ def main(argv=None) -> None:
         "fig9": fig9_checkpointing.main,
         "search": search_time.main,
         "topology": topology_sweep.main,
+        "overlap": overlap_sweep.main,
         "auto_g": auto_granularity.main,  # beyond-paper (§4.3 future work)
         "roofline": roofline_report.main,
     }
-    takes_device = {"search", "topology"}
+    takes_device = {"search", "topology", "overlap"}
     for name in args:
         fn = sections.get(name)
         if fn is None:
@@ -57,10 +68,12 @@ def main(argv=None) -> None:
             continue
         print(f"\n===== {name} =====")
         t0 = time.perf_counter()
+        kwargs = {}
         if device and name in takes_device:
-            fn(device=device)
-        else:
-            fn()
+            kwargs["device"] = device
+        if overlap is not None and name == "overlap":
+            kwargs["overlap"] = overlap
+        fn(**kwargs)
         print(f"# [{name}] done in {time.perf_counter() - t0:.1f}s")
 
 

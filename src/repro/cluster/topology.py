@@ -79,6 +79,8 @@ class ClusterLevel:
     ways: int                 # fan-out at this level
     bandwidth: float          # bytes/s per link at this level
     alpha: float = 1e-6      # per-collective-step latency (s)
+    overlap: float = 0.0     # fraction of this level's comm hideable
+                             # under compute (0 = serial legacy model)
 
 
 @dataclass(frozen=True)
@@ -117,6 +119,9 @@ class ClusterSpec:
         for l in self.levels:
             if l.ways < 1 or l.bandwidth <= 0:
                 raise ValueError(f"bad level {l}")
+            if not 0.0 <= l.overlap <= 1.0:
+                raise ValueError(
+                    f"level {l.name}: overlap {l.overlap} outside [0, 1]")
         # a ways > 1 level outside a ways == 1 level would break the
         # level-index <-> mesh-axis correspondence (mesh_config drops
         # ways == 1 axes, and sharding maps "ZDP@k" to the k innermost
@@ -149,6 +154,40 @@ class ClusterSpec:
     def span_ways(self, k: int) -> int:
         """Devices inside one span of the innermost k levels."""
         return math.prod(l.ways for l in self.levels[:k])
+
+    # -- comm/compute overlap ------------------------------------------------
+
+    @property
+    def overlaps(self) -> Tuple[float, ...]:
+        """Per-level overlap factors, innermost-first (parallel to
+        `levels`)."""
+        return tuple(l.overlap for l in self.levels)
+
+    @property
+    def has_overlap(self) -> bool:
+        """True when any level can hide communication under compute —
+        the cost model only leaves its serial-sum (legacy, golden-
+        pinned) path when this is set."""
+        return any(l.overlap > 0.0 for l in self.levels)
+
+    def with_overlap(self, overlap) -> "ClusterSpec":
+        """Copy of this spec with overlap factors replaced: a scalar
+        applies to every level, a mapping ``{level_name: factor}``
+        sets only the named levels (others keep their current value).
+        ``with_overlap(0.0)`` recovers the serial cost model."""
+        if isinstance(overlap, (int, float)):
+            by_name = {l.name: float(overlap) for l in self.levels}
+        else:
+            by_name = dict(overlap)
+            unknown = set(by_name) - {l.name for l in self.levels}
+            if unknown:
+                raise ValueError(
+                    f"unknown levels {sorted(unknown)}; have "
+                    f"{[l.name for l in self.levels]}")
+        levels = tuple(
+            dataclasses.replace(l, overlap=by_name[l.name])
+            if l.name in by_name else l for l in self.levels)
+        return dataclasses.replace(self, levels=levels)
 
     # -- sharding modes ------------------------------------------------------
 
@@ -307,6 +346,20 @@ class ClusterSpec:
 
     def outer_rings(self, k: int) -> List[Tuple[int, float, float, int]]:
         return self.span_rings(k, self.depth)
+
+    def span_ring_levels(self, k_lo: int, k_hi: int) -> List[int]:
+        """Absolute level index of each ring `span_rings(k_lo, k_hi)`
+        returns (the ways-1 levels are skipped by both), so timeline
+        cost code can bucket each ring's seconds under the level whose
+        `overlap` factor governs it."""
+        return [k_lo + i for i, l in enumerate(self.levels[k_lo:k_hi])
+                if l.ways > 1]
+
+    def gather_ring_levels(self, k: int) -> List[int]:
+        return self.span_ring_levels(0, k)
+
+    def outer_ring_levels(self, k: int) -> List[int]:
+        return self.span_ring_levels(k, self.depth)
 
     def inner_span_terms(self, n: int) -> Tuple[float, float]:
         """(alpha_sum, beta_per_byte) of one ring pass over the
@@ -535,6 +588,23 @@ class ClusterSpec:
             rem = max(1, rem // max(1, l.ways))
         return bw
 
+    def pp_boundary_overlap(self, pp: int) -> float:
+        """Overlap factor of the link a pipeline-stage boundary
+        crosses (same walk as `pp_boundary_bandwidth`): how much of a
+        stage's boundary send can hide under the next microbatch's
+        compute."""
+        if pp <= 1:
+            return self.levels[0].overlap
+        rem = pp
+        ov = self.levels[-1].overlap
+        for l in reversed(self.levels):
+            if rem <= 1:
+                break
+            if l.ways > 1:
+                ov = l.overlap
+            rem = max(1, rem // max(1, l.ways))
+        return ov
+
     # -- flat-model interop --------------------------------------------------
 
     @classmethod
@@ -556,12 +626,16 @@ class ClusterSpec:
             # speed) data extent — fold it inward so no ways > 1 level
             # sits outside a ways-1 level
             return cls(levels=(
-                ClusterLevel("data", n_pods, device.dci_bw, device.alpha),
-                ClusterLevel("pod", 1, device.dci_bw, device.alpha)),
+                ClusterLevel("data", n_pods, device.dci_bw, device.alpha,
+                             device.overlap),
+                ClusterLevel("pod", 1, device.dci_bw, device.alpha,
+                             device.overlap)),
                 device=device)
         return cls(levels=(
-            ClusterLevel("data", n_local, device.ici_bw, device.alpha),
-            ClusterLevel("pod", n_pods, device.dci_bw, device.alpha)),
+            ClusterLevel("data", n_local, device.ici_bw, device.alpha,
+                         device.overlap),
+            ClusterLevel("pod", n_pods, device.dci_bw, device.alpha,
+                         device.overlap)),
             device=device)
 
     @classmethod
@@ -574,12 +648,14 @@ class ClusterSpec:
         dpn = getattr(device, "devices_per_node", 0) or 0
         if dpn and 1 <= dpn < n_devices and n_devices % dpn == 0:
             return cls(levels=(
-                ClusterLevel("node", dpn, device.ici_bw, device.alpha),
+                ClusterLevel("node", dpn, device.ici_bw, device.alpha,
+                             device.overlap),
                 ClusterLevel("cluster", n_devices // dpn, device.dci_bw,
-                             device.alpha)),
+                             device.alpha, device.overlap)),
                 device=device)
         return cls(levels=(
-            ClusterLevel("data", n_devices, device.ici_bw, device.alpha),),
+            ClusterLevel("data", n_devices, device.ici_bw, device.alpha,
+                         device.overlap),),
             device=device)
 
     def to_flat(self) -> Tuple[DeviceInfo, MeshConfig]:
@@ -643,8 +719,8 @@ def tpu_multipod(n_pods: int, pod_size: int,
     """TPU fleet: `pod_size` chips on ICI per pod, pods on DCI."""
     dev = device or DeviceInfo()
     return ClusterSpec(levels=(
-        ClusterLevel("data", pod_size, dev.ici_bw, dev.alpha),
-        ClusterLevel("pod", n_pods, dev.dci_bw, dev.alpha)),
+        ClusterLevel("data", pod_size, dev.ici_bw, dev.alpha, dev.overlap),
+        ClusterLevel("pod", n_pods, dev.dci_bw, dev.alpha, dev.overlap)),
         device=dev)
 
 
@@ -658,15 +734,18 @@ def gpu_cluster(n_nodes: int, gpus_per_node: int = 8,
     `spine_nodes` nodes per leaf switch."""
     dev = device or DeviceInfo.preset("a100-80g")
     dev = dataclasses.replace(dev, ici_bw=nvlink_bw, dci_bw=ib_bw)
-    levels = [ClusterLevel("node", gpus_per_node, nvlink_bw, dev.alpha)]
+    levels = [ClusterLevel("node", gpus_per_node, nvlink_bw, dev.alpha,
+                           dev.overlap)]
     if spine_nodes and spine_nodes < n_nodes:
         if n_nodes % spine_nodes:
             raise ValueError("spine_nodes must divide n_nodes")
-        levels.append(ClusterLevel("rack", spine_nodes, ib_bw, dev.alpha))
+        levels.append(ClusterLevel("rack", spine_nodes, ib_bw, dev.alpha,
+                                   dev.overlap))
         levels.append(ClusterLevel("spine", n_nodes // spine_nodes,
-                                   spine_bw, dev.alpha))
+                                   spine_bw, dev.alpha, dev.overlap))
     else:
-        levels.append(ClusterLevel("rack", n_nodes, ib_bw, dev.alpha))
+        levels.append(ClusterLevel("rack", n_nodes, ib_bw, dev.alpha,
+                                   dev.overlap))
     return ClusterSpec(levels=tuple(levels), device=dev)
 
 
@@ -682,8 +761,9 @@ def mixed_memory_fleet(n_small: int, small_hbm_gib: float,
     if n % pod_size:
         raise ValueError("pod_size must divide the fleet")
     return ClusterSpec(levels=(
-        ClusterLevel("data", pod_size, dev.ici_bw, dev.alpha),
-        ClusterLevel("pod", n // pod_size, dev.dci_bw, dev.alpha)),
+        ClusterLevel("data", pod_size, dev.ici_bw, dev.alpha, dev.overlap),
+        ClusterLevel("pod", n // pod_size, dev.dci_bw, dev.alpha,
+                     dev.overlap)),
         device=dev,
         groups=(
             DeviceGroup("small", n_small, small_hbm_gib * 2**30),

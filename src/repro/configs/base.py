@@ -268,20 +268,35 @@ class DeviceInfo:
     # code infer a node boundary from a flat DeviceInfo (0 = unknown:
     # the whole extent is assumed to sit on ici_bw, the legacy model)
     devices_per_node: int = 0
+    # fraction of collective time the runtime can hide under compute
+    # (prefetched gathers / async all-reduce).  0 keeps the serial cost
+    # model — every committed golden is pinned at 0; per-preset
+    # achievable values live in PRESET_OVERLAP and are opt-in via
+    # `preset(name, overlap=...)` / `--overlap`.
+    overlap: float = 0.0
 
     def link_bw(self, axis: str) -> float:
         return self.dci_bw if axis == "pod" else self.ici_bw
 
     @classmethod
-    def preset(cls, name: str) -> "DeviceInfo":
+    def preset(cls, name: str,
+               overlap: Union[float, str, None] = None) -> "DeviceInfo":
         """Catalog of profiled hardware targets (`--device` on the
-        launchers and benchmark CLIs)."""
+        launchers and benchmark CLIs).  `overlap` sets the comm/compute
+        overlap factor: None keeps the serial model (0.0, the golden-
+        pinned default), "auto" takes the preset's achievable value
+        from PRESET_OVERLAP, a float is used as-is."""
         try:
-            return cls(name=name, **_DEVICE_PRESETS[name])
+            dev = cls(name=name, **_DEVICE_PRESETS[name])
         except KeyError:
             raise KeyError(
                 f"unknown device preset {name!r}; "
                 f"known: {sorted(_DEVICE_PRESETS)}") from None
+        if overlap is None:
+            return dev
+        if overlap == "auto":
+            overlap = PRESET_OVERLAP[name]
+        return dataclasses.replace(dev, overlap=float(overlap))
 
 
 # peak_flops are bf16 dense; mxu_efficiency is the sustained fraction
@@ -304,6 +319,18 @@ _DEVICE_PRESETS = {
 }
 
 DEVICE_PRESETS = tuple(sorted(_DEVICE_PRESETS))
+
+# achievable comm/compute overlap per preset, used by `--overlap auto`:
+# how much of a collective the runtime's prefetched gathers / bucketed
+# async all-reduce can hide under compute on that interconnect.  Kept
+# OUT of _DEVICE_PRESETS so a bare `preset(name)` still prices serially
+# (committed goldens depend on it).
+PRESET_OVERLAP = {
+    "tpu-v5e": 0.7,    # ICI collectives schedule well behind the MXU
+    "tpu-v4": 0.7,
+    "a100-80g": 0.6,   # NCCL copy engines vs SM contention
+    "h100-sxm": 0.8,   # SHARP offload + faster NVLink
+}
 
 
 # OSDPConfig.checkpointing value that promotes remat from a global

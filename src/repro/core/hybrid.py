@@ -198,14 +198,24 @@ def hybrid_step_time(base_time: float, desc: ModelDescription,
     (out of `plan_cost` / the inner search); TP collectives add to it,
     then the GPipe bubble stretches the whole step and the boundary
     sends land on the critical path.
-    """
+
+    When the boundary level declares a comm/compute overlap factor,
+    each microbatch's boundary send hides under the next microbatch's
+    in-flight work: per microbatch the exposed send is
+    max(0, send - ov * t/micro), which totals max(0, pp_t - ov * t)
+    over the step.  At overlap 0 this is exactly the serial `+= pp_t`.
+    TP activation all-reduces sit on the layer critical path (each
+    layer's output feeds the next) and stay serial."""
     b_local = max(1, batch // f.dp)
     t = base_time + tp_activation_time(desc, device, b_local, f.tp,
                                        cluster)
     if f.pp > 1:
         t /= (1.0 - pp_bubble_fraction(f.pp, micro))
-        t += pp_boundary_time(desc, device, b_local, f.pp, micro,
-                              cluster)
+        pp_t = pp_boundary_time(desc, device, b_local, f.pp, micro,
+                                cluster)
+        ov = (cluster.pp_boundary_overlap(f.pp) if cluster is not None
+              else 0.0)
+        t += pp_t if ov <= 0.0 else max(0.0, pp_t - ov * t)
     return t
 
 

@@ -47,11 +47,14 @@ def _attach_shardings(tree, shardings):
 def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
                 osdp: Optional[OSDPConfig] = None, compile_: bool = True,
                 verbose: bool = True,
-                device=None) -> Dict[str, Any]:
+                device=None, overlap=None) -> Dict[str, Any]:
     """Lower (+ compile) one (arch, shape, mesh). Returns the record for
     EXPERIMENTS.md §Dry-run / §Roofline.  `device` (a DeviceInfo, e.g.
     from `DeviceInfo.preset`) changes the planner's hardware constants;
-    the forced host mesh stays the same."""
+    the forced host mesh stays the same.  `overlap` (an
+    `sharding.specs.OverlapConfig`) lowers the overlapped runtime —
+    prefetch barriers + gradient buckets — instead of the legacy
+    program."""
     t_start = time.perf_counter()
     model_cfg = get_arch(arch)
     shape = get_shape(shape_name)
@@ -60,7 +63,7 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
     run = RunConfig(model=model_cfg, shape=shape, mesh=mesh_cfg, osdp=osdp)
     plan = make_plan(run, device)
     mesh = make_mesh_from_config(mesh_cfg)
-    built = build_model(run, plan, mesh)
+    built = build_model(run, plan, mesh, overlap=overlap)
     model = built.model
 
     abstract_params = _attach_shardings(built.abstract_params(),
@@ -192,11 +195,29 @@ def main(argv=None) -> int:
     ap.add_argument("--device", default=None, metavar="PRESET",
                     help="DeviceInfo preset for the planner "
                          "(tpu-v5e, tpu-v4, a100-80g, h100-sxm)")
+    ap.add_argument("--overlap", default=None, metavar="FACTOR",
+                    help="comm/compute overlap factor in [0, 1] (or "
+                         "'auto' with --device) for the planner's "
+                         "timeline model; also lowers the overlapped "
+                         "runtime (prefetch + gradient buckets)")
     ap.add_argument("--out", default=None, help="write records JSON here")
     args = ap.parse_args(argv)
 
+    import dataclasses as _dc
     from repro.configs import DeviceInfo
-    device = DeviceInfo.preset(args.device) if args.device else None
+    overlap = None
+    if args.overlap is not None:
+        ov = args.overlap if args.overlap == "auto" else float(args.overlap)
+        if args.device:
+            device = DeviceInfo.preset(args.device, overlap=ov)
+        elif ov == "auto":
+            ap.error("--overlap auto needs a --device preset")
+        else:
+            device = _dc.replace(DeviceInfo(), overlap=ov)
+        from repro.sharding.specs import OverlapConfig
+        overlap = OverlapConfig()
+    else:
+        device = DeviceInfo.preset(args.device) if args.device else None
     osdp = OSDPConfig(force_mode=args.force_mode) if args.force_mode \
         else None
     combos = []
@@ -218,6 +239,7 @@ def main(argv=None) -> int:
         try:
             records.append(lower_combo(arch, shape, multi_pod=mp,
                                        osdp=osdp, device=device,
+                                       overlap=overlap,
                                        compile_=not args.no_compile))
         except Exception as e:  # noqa: BLE001 - report and continue
             traceback.print_exc()

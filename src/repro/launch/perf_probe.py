@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """§Perf probe CLI: lower one combo with configurable knobs, dump the
 roofline-relevant evidence (memory_analysis, collective census by
 scope, largest buffers) so hypothesis -> change -> measure cycles can
@@ -8,12 +5,92 @@ diff variants.
 
   python -m repro.launch.perf_probe --arch llama3-405b --shape train_4k \
       [--multi-pod] [--force-mode ZDP] [--no-remat] [--microbatch 4] \
-      [--tag baseline]
+      [--measure-bw] [--device tpu-v5e] [--tag baseline]
+
+`--measure-bw` times an all-gather over every mesh axis and reports
+the *achieved* per-level bandwidth; with `--device` the record pairs
+those numbers against the preset ClusterSpec's assumed
+`ClusterLevel.bandwidth`/`overlap`, a sanity check for the overlap
+factors fed to the two-resource timeline (docs/cost_model.md §9).
+
+The 512-host-device XLA flag is set inside `main()` — before jax is
+imported — so importing this module (e.g. pytest collection) leaves
+the process environment untouched.
 """
+from __future__ import annotations
+
 import argparse
 import json
+import os
 import sys
 import time
+
+_XLA_FLAG = "--xla_force_host_platform_device_count=512"
+
+
+def measure_level_bandwidth(mesh, size_mib: float = 4.0,
+                            repeats: int = 3) -> dict:
+    """Timed all-gather over each mesh axis: achieved bytes/s per
+    level of the hierarchy the mesh spans.  Axes of span 1 move no
+    bytes and report ``achieved_bytes_per_s: None``.  On the forced
+    host platform the numbers measure the emulation backend — still
+    useful for relative axis-to-axis comparison; on real hardware
+    they bound how much overlap credit a level can honestly claim.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    out = {}
+    n = max(1, int(size_mib * 2**20) // 4)
+    for axis in mesh.axis_names:
+        ways = int(mesh.shape[axis])
+        if ways < 2:
+            out[axis] = {"ways": ways, "bytes_moved": 0, "seconds": 0.0,
+                         "achieved_bytes_per_s": None}
+            continue
+        n_ax = max(ways, (n // ways) * ways)
+        x = jax.device_put(jnp.zeros((n_ax,), jnp.float32),
+                           NamedSharding(mesh, P(axis)))
+        gather = jax.jit(lambda v: v + 1.0,
+                         out_shardings=NamedSharding(mesh, P()))
+        jax.block_until_ready(gather(x))          # compile + warm up
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            jax.block_until_ready(gather(x))
+        dt = (time.perf_counter() - t0) / repeats
+        # ring all-gather: each device receives (ways-1)/ways of the array
+        moved = 4 * n_ax * (ways - 1) // ways
+        out[axis] = {"ways": ways, "bytes_moved": moved, "seconds": dt,
+                     "achieved_bytes_per_s": moved / dt if dt > 0 else None}
+    return out
+
+
+def overlap_sanity(measured: dict, device_name: str,
+                   n_devices: int) -> list:
+    """Pair measured per-axis bandwidth with the preset ClusterSpec's
+    assumed level bandwidths (innermost axis <-> innermost level).
+    ``achieved_over_spec`` far below 1 says the level's `overlap`
+    factor is optimistic for this backend."""
+    from repro.cluster.topology import ClusterSpec
+    from repro.configs import DeviceInfo
+
+    spec = ClusterSpec.from_device(DeviceInfo.preset(device_name),
+                                   n_devices)
+    rows = []
+    axes = [a for a in reversed(list(measured))
+            if measured[a]["ways"] > 1]
+    for axis, level in zip(axes, spec.levels):
+        got = measured[axis]["achieved_bytes_per_s"]
+        rows.append({
+            "axis": axis, "level": level.name,
+            "spec_bytes_per_s": level.bandwidth,
+            "spec_overlap": level.overlap,
+            "achieved_bytes_per_s": got,
+            "achieved_over_spec":
+                round(got / level.bandwidth, 6) if got else None,
+        })
+    return rows
 
 
 def main(argv=None) -> int:
@@ -28,9 +105,19 @@ def main(argv=None) -> int:
     ap.add_argument("--memory-gib", type=float, default=16.0)
     ap.add_argument("--tag", default="probe")
     ap.add_argument("--dump-hlo", default=None)
+    ap.add_argument("--measure-bw", action="store_true",
+                    help="time an all-gather per mesh axis (achieved "
+                         "per-level bandwidth)")
+    ap.add_argument("--bw-mib", type=float, default=4.0)
+    ap.add_argument("--device", default=None,
+                    help="DeviceInfo preset to compare measured "
+                         "bandwidth against (overlap sanity check)")
     args = ap.parse_args(argv)
 
-    import dataclasses
+    # Must land before the first jax import; setdefault lets callers
+    # (tests, small hosts) force a smaller fake-device count.
+    os.environ.setdefault("XLA_FLAGS", _XLA_FLAG)
+
     import jax
     from repro.configs import (MULTI_POD_MESH, SINGLE_POD_MESH, OSDPConfig,
                                RunConfig, get_arch, get_shape)
@@ -121,6 +208,12 @@ def main(argv=None) -> int:
             "largest_gib": [
                 (round(g, 3), n) for g, n in largest_tensors(txt)],
         }
+        if args.measure_bw:
+            measured = measure_level_bandwidth(mesh, size_mib=args.bw_mib)
+            rec["measured_bandwidth"] = measured
+            if args.device:
+                rec["overlap_sanity"] = overlap_sanity(
+                    measured, args.device, mesh.size)
     if args.dump_hlo:
         with open(args.dump_hlo, "w") as f:
             f.write(txt)

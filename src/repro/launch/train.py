@@ -22,6 +22,7 @@ from repro.configs import (DeviceInfo, MeshConfig, OSDPConfig, RunConfig,
 from repro.core.plan import make_plan
 from repro.models.registry import build_model
 from repro.optim import AdamWConfig
+from repro.sharding.specs import OverlapConfig
 from repro.train.loop import train
 
 
@@ -40,6 +41,19 @@ def main(argv=None) -> int:
     ap.add_argument("--device", default=None, metavar="PRESET",
                     help="DeviceInfo preset the planner prices against "
                          "(tpu-v5e, tpu-v4, a100-80g, h100-sxm)")
+    ap.add_argument("--overlap", default=None, metavar="FACTOR",
+                    help="comm/compute overlap: a factor in [0, 1] for "
+                         "the planner's timeline model, or 'auto' for "
+                         "the --device preset's catalog value; also "
+                         "turns on the runtime prefetch + gradient-"
+                         "bucketing transforms (default: off, serial "
+                         "model, legacy program)")
+    ap.add_argument("--overlap-prefetch", type=int, default=1,
+                    help="segment-weight gather prefetch depth "
+                         "(slices ahead, with --overlap)")
+    ap.add_argument("--overlap-bucket-mib", type=float, default=4.0,
+                    help="gradient all-reduce bucket size in MiB "
+                         "(with --overlap)")
     ap.add_argument("--force-mode", default=None, choices=["DP", "ZDP"])
     ap.add_argument("--no-osdp", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
@@ -71,11 +85,24 @@ def main(argv=None) -> int:
                       memory_limit_bytes=args.memory_gib * 2**30,
                       force_mode=args.force_mode)
     run = RunConfig(model=model_cfg, shape=shape, mesh=mesh_cfg, osdp=osdp)
-    device = DeviceInfo.preset(args.device) if args.device else None
+    overlap_cfg = None
+    if args.overlap is not None:
+        ov = args.overlap if args.overlap == "auto" else float(args.overlap)
+        if args.device:
+            device = DeviceInfo.preset(args.device, overlap=ov)
+        elif ov == "auto":
+            ap.error("--overlap auto needs a --device preset")
+        else:
+            device = dataclasses.replace(DeviceInfo(), overlap=ov)
+        overlap_cfg = OverlapConfig(
+            prefetch=args.overlap_prefetch,
+            bucket_bytes=int(args.overlap_bucket_mib * 2**20))
+    else:
+        device = DeviceInfo.preset(args.device) if args.device else None
     plan = make_plan(run, device)
     print(plan.summary())
     mesh = jax.make_mesh(mesh_cfg.shape, mesh_cfg.axes) if n_dev > 1 else None
-    built = build_model(run, plan, mesh)
+    built = build_model(run, plan, mesh, overlap=overlap_cfg)
     res = train(built, args.steps, seed=args.seed,
                 opt_cfg=AdamWConfig(lr=args.lr), warmup=args.warmup,
                 ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,

@@ -27,7 +27,7 @@ from repro.core.cost_model import Decision
 from repro.core.plan import Plan, batch_axes
 from repro.models.common import attn_geometry
 from repro.models.transformer import Model, build_specs
-from repro.sharding.specs import (ParamSet, build_param_set,
+from repro.sharding.specs import (OverlapConfig, ParamSet, build_param_set,
                                   saved_activation_names)
 
 # VLM stub: patch-embedding budget per sequence (see configs/qwen2_vl_2b)
@@ -58,14 +58,21 @@ class Built:
 
 
 def build_model(run: RunConfig, plan: Optional[Plan] = None,
-                mesh: Optional[Mesh] = None) -> Built:
+                mesh: Optional[Mesh] = None,
+                overlap: Optional[OverlapConfig] = None) -> Built:
+    """`overlap` enables the runtime comm/compute overlap transforms:
+    segment-weight prefetch in `seg_matmul` (via the pset the model
+    holds) and bucketed gradient barriers in `make_train_step` (which
+    reads it back off `built.pset_abstract.overlap`).  None keeps the
+    exact legacy program."""
     cfg = run.model
     cfg.validate()
     tp = run.mesh.model_parallel
     decisions: Dict[str, Decision] = plan.decisions if plan else {}
     specs = build_specs(cfg, tp)
     pset = build_param_set(specs, decisions, mesh,
-                           jax.random.PRNGKey(run.seed), abstract=True)
+                           jax.random.PRNGKey(run.seed), abstract=True,
+                           overlap=overlap)
     geom = attn_geometry(cfg, tp) if cfg.has_attention else None
     model = Model(cfg=cfg, geom=geom, pset=pset, decisions=decisions,
                   remat=_remat_policy(run, decisions, pset),

@@ -211,6 +211,33 @@ def _init_array(key: jax.Array, spec: WeightSpec,
             ).astype(spec.dtype)
 
 
+@dataclass(frozen=True)
+class OverlapConfig:
+    """Runtime comm/compute overlap knobs — the executed counterpart of
+    `ClusterLevel.overlap` in the cost model.
+
+    `prefetch` is how many segment weights ahead `seg_matmul` forces
+    XLA to gather: slice k+prefetch's all-gather is barrier-ordered
+    before slice k's contraction, so the gather streams behind the
+    matmul instead of serializing with it (0 disables).  `bucket_bytes`
+    groups gradient leaves into independently-schedulable all-reduce
+    buckets overlapping the remaining backward walk; smaller buckets
+    start reducing earlier but pay more per-collective latency (the
+    alpha term), larger ones amortize latency but expose more tail —
+    the trade-off `docs/cost_model.md` §9 quantifies.  Both transforms
+    are identity on values: the overlapped step computes bit-identical
+    results (asserted by tests/test_overlap.py)."""
+
+    prefetch: int = 1
+    bucket_bytes: int = 4 << 20
+
+    def __post_init__(self):
+        if self.prefetch < 0:
+            raise ValueError("prefetch must be >= 0")
+        if self.bucket_bytes < 0:
+            raise ValueError("bucket_bytes must be >= 0")
+
+
 @dataclass
 class ParamSet:
     """Materialized parameters + shardings + segmentation metadata."""
@@ -218,6 +245,7 @@ class ParamSet:
     params: Dict[str, jax.Array]              # flat path -> array
     shardings: Dict[str, NamedSharding]
     layouts: Dict[str, SegLayout]              # weight path -> layout
+    overlap: Optional[OverlapConfig] = None    # runtime overlap knobs
 
     def tree(self) -> Dict[str, jax.Array]:
         return self.params
@@ -246,7 +274,8 @@ def build_param_set(specs: Sequence[WeightSpec],
                     decisions: Optional[Dict[str, Decision]],
                     mesh: Optional[Mesh],
                     key: jax.Array,
-                    abstract: bool = False) -> ParamSet:
+                    abstract: bool = False,
+                    overlap: Optional[OverlapConfig] = None) -> ParamSet:
     """Create params (or ShapeDtypeStructs if abstract) + shardings."""
     params: Dict[str, jax.Array] = {}
     shardings: Dict[str, NamedSharding] = {}
@@ -265,7 +294,7 @@ def build_param_set(specs: Sequence[WeightSpec],
                 params[leaf] = jax.ShapeDtypeStruct(shp, spec.dtype)
             else:
                 params[leaf] = _init_array(k, spec, shp)
-    return ParamSet(params, shardings, layouts)
+    return ParamSet(params, shardings, layouts, overlap)
 
 
 # --- hybrid 3D meshes (data x model x pipe) ----------------------------------
@@ -374,6 +403,24 @@ def gather_weight(params: Dict[str, jax.Array], pset: ParamSet,
     return jnp.concatenate([params[k] for k, _ in segs], axis=axis)
 
 
+def _prefetch_weights(ws: List[jax.Array], ahead: int) -> List[jax.Array]:
+    """One-slice-ahead (or `ahead`-ahead) weight prefetch.
+
+    Barrier-ties each segment's weight to its successor `ahead` slices
+    later: `optimization_barrier` is identity on values but tells XLA
+    that slice k's contraction cannot be scheduled before slice
+    k+ahead's weight (i.e. its ZDP all-gather) has been issued, so the
+    gather of the next slice streams behind the current matmul instead
+    of serializing after it.  Numerics are untouched.
+    """
+    out = list(ws)
+    ahead = max(1, ahead)
+    for k in range(len(out) - 1):
+        j = min(k + ahead, len(out) - 1)
+        out[k], out[j] = jax.lax.optimization_barrier((out[k], out[j]))
+    return out
+
+
 def seg_matmul(x: jax.Array, params: Dict[str, jax.Array], pset: ParamSet,
                path: str, in_axis_in_weight: int) -> jax.Array:
     """Operator splitting (§3.3) over per-mode segments.
@@ -385,6 +432,10 @@ def seg_matmul(x: jax.Array, params: Dict[str, jax.Array], pset: ParamSet,
     are computed sequentially and concatenated. Either way only one
     gathered slice is live at a time. `in_axis_in_weight` counts within
     the per-layer weight (excluding a stacked layer axis).
+
+    With `pset.overlap.prefetch > 0` segment weights are chained through
+    `_prefetch_weights` so slice k+1's all-gather overlaps slice k's
+    contraction (value-identical; scheduling only).
     """
     segs = pset.segments(path)
     spec = pset.layouts[path].spec
@@ -393,23 +444,25 @@ def seg_matmul(x: jax.Array, params: Dict[str, jax.Array], pset: ParamSet,
     if len(segs) == 1:
         return checkpoint_name(
             _contract(x, params[segs[0][0]], in_axis_in_weight), path)
+    ws = [params[leaf] for leaf, _ in segs]
+    if pset.overlap is not None and pset.overlap.prefetch > 0:
+        ws = _prefetch_weights(ws, pset.overlap.prefetch)
     zdp_local = spec.zdp_axis - (1 if spec.stacked else 0)
     if zdp_local == in_axis_in_weight:
         # sum variant (input-dim split, Figure 4): partial sums are
         # full-size, so only the combined output carries a name
         y = None
         off = 0
-        for leaf, seg in segs:
+        for w, (leaf, seg) in zip(ws, segs):
             xs = jax.lax.dynamic_slice_in_dim(x, off, seg.size, axis=-1)
-            part = _contract(xs, params[leaf], in_axis_in_weight)
+            part = _contract(xs, w, in_axis_in_weight)
             y = part if y is None else y + part
             off += seg.size
         return checkpoint_name(y, path)
     # concat variant (output-dim split): per-segment names, so remat
     # stays a per-slice choice in the executed program
-    parts = [checkpoint_name(_contract(x, params[leaf], in_axis_in_weight),
-                             leaf)
-             for leaf, _ in segs]
+    parts = [checkpoint_name(_contract(x, w, in_axis_in_weight), leaf)
+             for w, (leaf, _) in zip(ws, segs)]
     return jnp.concatenate(parts, axis=-1)
 
 

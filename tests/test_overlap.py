@@ -1,0 +1,300 @@
+"""Two-resource timeline cost model + overlapped runtime.
+
+Pins the PR's two contracts:
+
+  * cost model — overlap 0 is byte-identical to the legacy serial sum
+    (on random plans across models x envs), comm decomposes exactly
+    into per-level buckets, exposed time is monotone non-increasing in
+    every overlap factor, and the evaluator (full eval AND O(1) flip
+    sequences) tracks the direct `plan_cost` timeline exactly;
+  * runtime — the prefetch + gradient-bucketing transforms are
+    identity on values: the overlapped train step produces the SAME
+    loss trajectory as the legacy step.
+"""
+import dataclasses
+import random
+
+import numpy as np
+import pytest
+
+from conftest import tiny_run
+from repro.cluster.topology import (ClusterSpec, gpu_cluster,
+                                    mixed_memory_fleet, tpu_multipod)
+from repro.configs import (DeviceInfo, OSDPConfig, RunConfig, MeshConfig,
+                           get_arch, get_shape, reduced)
+from repro.core.cost_model import (DP, MODES, ZDP, CostEnv, Decision,
+                                   PlanEvaluator, ServingWorkload,
+                                   exposed_step_time, plan_cost,
+                                   serving_plan_cost, uniform_plan)
+from repro.core.descriptions import ShapeConfig, describe
+from repro.core.hybrid import Factorization, hybrid_step_time
+
+MODELS = ("phi4-mini-3.8b", "dbrx-132b", "mamba2-2.7b")
+
+
+def _specs():
+    dev = DeviceInfo()
+    a100 = DeviceInfo.preset("a100-80g")
+    return {
+        "flat": ClusterSpec.from_device(dev, 64),
+        "multipod": tpu_multipod(4, 16, dev),
+        "gpu3": gpu_cluster(8, 8, device=a100, nvlink_bw=300e9,
+                            ib_bw=25e9, spine_nodes=2, spine_bw=6e9),
+        "mixed": mixed_memory_fleet(8, 16, 8, 48, pod_size=8, device=dev),
+    }
+
+
+def _random_plan(desc, spec, rng):
+    modes = [DP, ZDP] + [spec.span_mode(k) for k in range(1, spec.depth)]
+    decs = {}
+    for op in desc.operators:
+        if not op.decidable:
+            decs[op.name] = Decision(op.name, (DP,))
+            continue
+        g = rng.choice([1, 2, 4]) if op.splittable else 1
+        decs[op.name] = Decision(
+            op.name, tuple(rng.choice(modes) for _ in range(g)))
+    return decs
+
+
+def _cost(desc, decs, batch, spec, ck=True):
+    return plan_cost(desc, decs, batch,
+                     CostEnv(spec.device, cluster=spec, checkpointing=ck))
+
+
+# --- overlap = 0 is the legacy model, exactly --------------------------------
+
+@pytest.mark.parametrize("model", MODELS)
+@pytest.mark.parametrize("spec_name", sorted(_specs()))
+def test_zero_overlap_reproduces_legacy(model, spec_name):
+    desc = describe(get_arch(model), get_shape("train_4k"))
+    spec = _specs()[spec_name]
+    spec0 = spec.with_overlap(0.0)
+    assert not spec0.has_overlap
+    rng = random.Random(hash((model, spec_name)) & 0xFFFF)
+    for trial in range(4):
+        decs = _random_plan(desc, spec, rng)
+        for batch in (64, 512):
+            legacy = _cost(desc, decs, batch, spec)
+            zeroed = _cost(desc, decs, batch, spec0)
+            for f in ("memory", "peak_memory", "time", "comm_time",
+                      "compute_time", "throughput"):
+                assert getattr(zeroed, f) == pytest.approx(
+                    getattr(legacy, f), rel=1e-12, abs=1e-15), f
+            # serial composition holds exactly at overlap 0
+            assert legacy.time == pytest.approx(
+                legacy.compute_time + legacy.comm_time, rel=1e-12)
+
+
+@pytest.mark.parametrize("model", MODELS)
+def test_comm_decomposes_into_level_buckets(model):
+    """sum over levels of the comm buckets == the scalar comm_time, and
+    the reported time is exactly the exposed-comm combination."""
+    desc = describe(get_arch(model), get_shape("train_4k"))
+    for spec_name, spec in _specs().items():
+        spec_ov = spec.with_overlap(0.5)
+        rng = random.Random(hash((model, spec_name, "lv")) & 0xFFFF)
+        for trial in range(3):
+            decs = _random_plan(desc, spec, rng)
+            c = _cost(desc, decs, 256, spec_ov)
+            assert len(c.comm_by_level) == spec.depth
+            assert sum(c.comm_by_level) == pytest.approx(
+                c.comm_time, rel=1e-12, abs=1e-15), spec_name
+            want = exposed_step_time(c.compute_time, c.comm_by_level,
+                                     spec_ov.overlaps)
+            assert c.time == pytest.approx(want, rel=1e-12), spec_name
+
+
+def test_exposed_time_monotone_in_overlap():
+    desc = describe(get_arch("dbrx-132b"), get_shape("train_4k"))
+    spec = _specs()["gpu3"]
+    decs = uniform_plan(desc, ZDP)
+    times = [_cost(desc, decs, 256, spec.with_overlap(ov)).time
+             for ov in (0.0, 0.3, 0.7, 1.0)]
+    for a, b in zip(times, times[1:]):
+        assert b <= a * (1 + 1e-12)
+    full = _cost(desc, decs, 256, spec.with_overlap(1.0))
+    assert full.time >= full.compute_time * (1 - 1e-12)
+    # per-level overlap only hides that level's traffic
+    part = _cost(desc, decs, 256,
+                 spec.with_overlap({spec.levels[0].name: 1.0}))
+    assert full.time <= part.time * (1 + 1e-12)
+
+
+def test_overlap_validation():
+    spec = _specs()["flat"]
+    with pytest.raises(ValueError):
+        spec.with_overlap(1.5)
+    with pytest.raises(ValueError):
+        spec.with_overlap({"no-such-level": 0.5})
+
+
+# --- evaluator equivalence under the timeline --------------------------------
+
+@pytest.mark.parametrize("spec_name", ("multipod", "gpu3"))
+def test_evaluator_matches_plan_cost_under_overlap(spec_name):
+    desc = describe(get_arch("dbrx-132b"), get_shape("train_4k"))
+    spec = _specs()[spec_name].with_overlap(
+        {_specs()[spec_name].levels[0].name: 0.9,
+         _specs()[spec_name].levels[1].name: 0.4})
+    env = CostEnv(spec.device, cluster=spec)
+    rng = random.Random(31)
+    for trial in range(4):
+        decs = _random_plan(desc, spec, rng)
+        for batch in (64, 512):
+            want = plan_cost(desc, decs, batch, env)
+            ev = PlanEvaluator.for_decisions(desc, env, decs)
+            got = ev.plan_cost(ev.modes_from_decisions(decs), batch)
+            for f in ("memory", "time", "comm_time", "compute_time",
+                      "throughput"):
+                assert getattr(got, f) == pytest.approx(
+                    getattr(want, f), rel=1e-9), (spec_name, f)
+            assert tuple(got.comm_by_level) == pytest.approx(
+                tuple(want.comm_by_level), rel=1e-9)
+
+
+def test_incremental_flips_match_full_eval_under_overlap():
+    """O(1) flip deltas must track the timeline exactly — the max() in
+    the exposed-comm combine happens at result() time, so the per-level
+    running sums cannot drift."""
+    desc = describe(get_arch("dbrx-132b"), get_shape("train_4k"))
+    base = _specs()["gpu3"]
+    spec = base.with_overlap({base.levels[0].name: 0.8,
+                              base.levels[2].name: 0.5})
+    env = CostEnv(spec.device, cluster=spec)
+    gran = {op.name: (4 if op.splittable else 1)
+            for op in desc.decidable()}
+    ev = PlanEvaluator(desc, env, gran)
+    ev.begin(np.zeros(ev.n_slices, dtype=np.int8), 256)
+    rng = random.Random(13)
+    for step in range(120):
+        j = rng.randrange(ev.n_slices)
+        if not desc.operators[int(ev.slice_op[j])].decidable:
+            continue
+        ev.flip(j, rng.randrange(len(MODES)))
+        if step % 15 == 0:
+            want = plan_cost(desc, ev.decisions(ev.current_modes), 256, env)
+            got = ev.result()
+            assert got.time == pytest.approx(want.time, rel=1e-9)
+            assert tuple(got.comm_by_level) == pytest.approx(
+                tuple(want.comm_by_level), rel=1e-9)
+
+
+# --- hybrid + serving paths ---------------------------------------------------
+
+def test_pp_boundary_overlap_monotone_and_zero_identical():
+    desc = describe(get_arch("dbrx-132b"), get_shape("train_4k"))
+    spec = _specs()["gpu3"]
+    dev = spec.device
+    f = Factorization(4, 4, 4)
+    t0 = hybrid_step_time(0.1, desc, dev, 256, f, cluster=spec)
+    t0b = hybrid_step_time(0.1, desc, dev, 256, f,
+                           cluster=spec.with_overlap(0.0))
+    assert t0 == t0b
+    prev = t0
+    for ov in (0.3, 0.7, 1.0):
+        t = hybrid_step_time(0.1, desc, dev, 256, f,
+                             cluster=spec.with_overlap(ov))
+        assert t <= prev * (1 + 1e-12)
+        prev = t
+
+
+def test_serving_overlap_monotone_and_zero_identical():
+    model = get_arch("phi4-mini-3.8b")
+    spec = _specs()["multipod"]
+    wl = ServingWorkload(prompt_len=512, decode_len=128)
+    n = spec.n_devices
+    desc_pre = describe(model, ShapeConfig("serve_prefill", 512, n,
+                                           "prefill"))
+    desc_dec = describe(model, ShapeConfig("serve_decode", 1, n, "decode"))
+    decs = uniform_plan(desc_dec, ZDP)
+
+    def cost(s):
+        env = CostEnv(s.device, cluster=s, train=False)
+        return serving_plan_cost(desc_pre, desc_dec, decs, wl, env, 8)
+
+    legacy = cost(spec)
+    zeroed = cost(spec.with_overlap(0.0))
+    assert zeroed.decode_step_time == legacy.decode_step_time
+    assert zeroed.prefill_time == legacy.prefill_time
+    prev = legacy
+    for ov in (0.4, 0.9):
+        c = cost(spec.with_overlap(ov))
+        assert c.decode_step_time <= prev.decode_step_time * (1 + 1e-12)
+        assert c.prefill_time <= prev.prefill_time * (1 + 1e-12)
+        prev = c
+
+
+# --- runtime: the overlapped step is value-identical --------------------------
+
+def test_overlap_config_validation():
+    from repro.sharding.specs import OverlapConfig
+    with pytest.raises(ValueError):
+        OverlapConfig(prefetch=-1)
+    with pytest.raises(ValueError):
+        OverlapConfig(bucket_bytes=-1)
+
+
+def test_prefetch_weights_and_bucket_grads_are_identity():
+    import jax
+    import jax.numpy as jnp
+    from repro.sharding.specs import _prefetch_weights
+    from repro.train.loop import _bucket_grads
+    ws = [jnp.arange(4.0) + i for i in range(5)]
+    for ahead in (1, 2):
+        out = _prefetch_weights(ws, ahead)
+        for a, b in zip(ws, out):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    tree = {"a": jnp.ones((3, 3)), "b": [jnp.zeros((7,)),
+                                         jnp.arange(5.0)]}
+    for bucket in (1, 40, 10**9):
+        got = _bucket_grads(tree, bucket)
+        assert jax.tree.structure(got) == jax.tree.structure(tree)
+        for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_overlapped_train_step_same_loss_trajectory():
+    """Prefetch barriers + gradient buckets must not change the math:
+    same plan, same data, same losses — bit-for-bit."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.plan import make_plan
+    from repro.models.registry import build_model
+    from repro.optim import AdamWConfig
+    from repro.sharding.specs import OverlapConfig
+    from repro.train.loop import make_train_step
+
+    cfg = reduced(get_arch("qwen1.5-0.5b"))
+    shape = dataclasses.replace(get_shape("train_4k"), seq_len=32,
+                                global_batch=2)
+    run = RunConfig(model=cfg, shape=shape,
+                    mesh=MeshConfig((1,), ("data",)),
+                    osdp=OSDPConfig(force_mode="ZDP",
+                                    operator_splitting=True,
+                                    default_slice_granularity=2))
+    plan = make_plan(run)
+    assert any(len(d.modes) > 1 for d in plan.decisions.values()), \
+        "plan must split at least one weight for the prefetch path"
+
+    def losses(overlap):
+        built = build_model(run, plan, None, overlap=overlap)
+        step_fn, init_fn = make_train_step(built, AdamWConfig(lr=1e-3),
+                                           donate=False)
+        params, opt = init_fn(jax.random.PRNGKey(0))
+        out = []
+        for s in range(3):
+            k = jax.random.PRNGKey(s)
+            batch = {
+                "tokens": jax.random.randint(k, (2, 32), 0,
+                                             cfg.vocab_size),
+                "labels": jax.random.randint(k, (2, 32), 0,
+                                             cfg.vocab_size),
+            }
+            params, opt, m = step_fn(params, opt, batch)
+            out.append(float(m["loss"]))
+        return out
+
+    base = losses(None)
+    over = losses(OverlapConfig(prefetch=1, bucket_bytes=1 << 20))
+    assert base == over, (base, over)
