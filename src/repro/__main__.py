@@ -1,0 +1,44 @@
+"""The `repro` command: dispatch to the launchers.
+
+  python -m repro calibrate --out profile.json
+  python -m repro train --arch qwen1.5-0.5b --steps 10 --reduced
+  python -m repro serve --arch qwen1.5-0.5b
+  python -m repro dryrun --arch llama3-405b --shape train_4k
+  python -m repro perf-probe --arch llama3-405b --shape train_4k
+
+Each subcommand is the matching `repro.launch.<name>` module; the
+module is only imported after dispatch so `python -m repro calibrate`
+can still set XLA_FLAGS before jax loads.
+"""
+from __future__ import annotations
+
+import importlib
+import sys
+
+COMMANDS = {
+    "calibrate": "repro.launch.calibrate",
+    "train": "repro.launch.train",
+    "serve": "repro.launch.serve",
+    "dryrun": "repro.launch.dryrun",
+    "perf-probe": "repro.launch.perf_probe",
+}
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv or argv[0] in ("-h", "--help"):
+        names = ", ".join(sorted(COMMANDS))
+        print(f"usage: python -m repro <command> [args]\n"
+              f"commands: {names}")
+        return 0 if argv else 2
+    cmd, rest = argv[0], argv[1:]
+    if cmd not in COMMANDS:
+        print(f"unknown command {cmd!r}; known: {sorted(COMMANDS)}",
+              file=sys.stderr)
+        return 2
+    mod = importlib.import_module(COMMANDS[cmd])
+    return mod.main(rest)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

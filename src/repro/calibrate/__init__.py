@@ -1,0 +1,20 @@
+"""Calibration subsystem: measure, fit, and ship per-device constants.
+
+`repro calibrate` (launch/calibrate.py) runs the timed sweeps in
+:mod:`repro.calibrate.bench`, fits them with
+:mod:`repro.calibrate.fit`, and writes a
+:class:`~repro.calibrate.profile.CalibrationProfile` that plugs into
+``CostEnv(..., profile=...)``.  ``profile=None`` keeps the legacy
+scalar constants byte-identical.
+"""
+from repro.calibrate.profile import (CalibrationProfile, EfficiencyCurve,
+                                     LinkCalibration, default_profile)
+from repro.calibrate.fit import (fit_alpha_beta, fit_efficiency_curve,
+                                 fit_link_calibrations, fit_remat_factor)
+from repro.calibrate import store
+
+__all__ = [
+    "CalibrationProfile", "EfficiencyCurve", "LinkCalibration",
+    "default_profile", "fit_alpha_beta", "fit_efficiency_curve",
+    "fit_link_calibrations", "fit_remat_factor", "store",
+]

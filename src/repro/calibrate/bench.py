@@ -1,0 +1,123 @@
+"""Timed micro-benchmarks behind `repro calibrate`.
+
+Three sweeps, mirroring the three fitted constants:
+
+* :func:`matmul_sweep` — square matmuls over a size ladder; feeds
+  :func:`repro.calibrate.fit.fit_efficiency_curve`.
+* :func:`collective_sweep` — the perf_probe all-gather timing swept
+  over message sizes per mesh axis; feeds
+  :func:`repro.calibrate.fit.fit_link_calibrations`.
+* :func:`remat_sweep` — grad of a deep matmul chain, plain vs
+  ``jax.checkpoint`` per layer; feeds
+  :func:`repro.calibrate.fit.fit_remat_factor`.
+
+jax is imported inside the functions (never at module import), so the
+caller controls ``XLA_FLAGS`` (fake-device count) before the first
+timed call — the same contract as ``launch/perf_probe.py``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Sequence, Tuple
+
+DEFAULT_MATMUL_SIZES = (64, 128, 256, 512, 1024)
+DEFAULT_BW_MIB = (0.25, 1.0, 4.0, 16.0)
+
+
+def _median_time(fn, *args, repeats: int = 3) -> float:
+    """Median wall-clock of ``fn(*args)`` after one warmup call
+    (compile + cache), via ``block_until_ready``."""
+    import jax
+    jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def matmul_sweep(sizes: Sequence[int] = DEFAULT_MATMUL_SIZES,
+                 repeats: int = 3) -> List[Tuple[float, float]]:
+    """Time jit'd square f32 matmuls; returns (total_flops, seconds)
+    samples sized for :func:`fit.fit_efficiency_curve`."""
+    import jax
+    import jax.numpy as jnp
+
+    f = jax.jit(lambda a, b: a @ b)
+    out = []
+    key = jax.random.PRNGKey(0)
+    for n in sizes:
+        ka, kb = jax.random.split(jax.random.fold_in(key, n))
+        a = jax.random.normal(ka, (n, n), jnp.float32)
+        b = jax.random.normal(kb, (n, n), jnp.float32)
+        dt = _median_time(f, a, b, repeats=repeats)
+        out.append((2.0 * n * n * n, dt))
+    return out
+
+
+def measured_peak_flops(samples: Sequence[Tuple[float, float]]) -> float:
+    """Best achieved FLOP/s across a matmul sweep — the natural peak
+    to normalize an efficiency curve against when no datasheet number
+    exists for the backend (CPU emulation)."""
+    return max(flops / seconds for flops, seconds in samples)
+
+
+def collective_sweep(mesh, sizes_mib: Sequence[float] = DEFAULT_BW_MIB,
+                     repeats: int = 3) -> Dict[str, List[Tuple[float, float]]]:
+    """Per-axis (bytes_moved, seconds) samples over a message-size
+    ladder, via ``perf_probe.measure_level_bandwidth``.  Span-1 axes
+    come back empty (they move no bytes)."""
+    from repro.launch.perf_probe import measure_level_bandwidth
+
+    out: Dict[str, List[Tuple[float, float]]] = {
+        str(a): [] for a in mesh.axis_names}
+    for mib in sizes_mib:
+        rec = measure_level_bandwidth(mesh, size_mib=mib, repeats=repeats)
+        for axis, row in rec.items():
+            if row["bytes_moved"] > 0:
+                out[str(axis)].append(
+                    (float(row["bytes_moved"]), float(row["seconds"])))
+    return out
+
+
+def remat_sweep(depth: int = 8, width: int = 256, batch: int = 64,
+                repeats: int = 3) -> Tuple[float, float]:
+    """(plain_seconds, remat_seconds) for one grad step of a
+    ``depth``-layer matmul+tanh chain — the remat variant wraps each
+    layer in ``jax.checkpoint`` so the backward pass recomputes every
+    forward activation, which is exactly what the cost model's
+    recompute factor charges for."""
+    import jax
+    import jax.numpy as jnp
+
+    key = jax.random.PRNGKey(1)
+    ws = [jax.random.normal(jax.random.fold_in(key, i), (width, width),
+                            jnp.float32) / jnp.sqrt(width)
+          for i in range(depth)]
+    x = jax.random.normal(jax.random.fold_in(key, depth), (batch, width),
+                          jnp.float32)
+
+    def layer(w, h):
+        return jnp.tanh(h @ w)
+
+    def loss_plain(ws, x):
+        h = x
+        for w in ws:
+            h = layer(w, h)
+        return jnp.sum(h * h)
+
+    ckpt_layer = jax.checkpoint(layer)
+
+    def loss_remat(ws, x):
+        h = x
+        for w in ws:
+            h = ckpt_layer(w, h)
+        return jnp.sum(h * h)
+
+    g_plain = jax.jit(jax.grad(loss_plain))
+    g_remat = jax.jit(jax.grad(loss_remat))
+    t_plain = _median_time(g_plain, ws, x, repeats=repeats)
+    t_remat = _median_time(g_remat, ws, x, repeats=repeats)
+    return t_plain, t_remat

@@ -189,6 +189,37 @@ class ClusterSpec:
             if l.name in by_name else l for l in self.levels)
         return dataclasses.replace(self, levels=levels)
 
+    # -- calibration ---------------------------------------------------------
+
+    def with_links(self, links) -> "ClusterSpec":
+        """Copy of this spec with measured (alpha, bandwidth) pairs
+        substituted for the datasheet constants — the ClusterSpec half
+        of attaching a `CalibrationProfile` to a `CostEnv`.
+
+        ``links`` is an iterable of objects with ``.level``,
+        ``.alpha`` and ``.bandwidth`` attributes
+        (`repro.calibrate.profile.LinkCalibration`; duck-typed so this
+        module stays import-free of the calibrate package).  Links are
+        matched to levels by name; if *no* link name matches any level
+        the links are assigned positionally innermost-first instead
+        (a profile fitted on a flat "data"/"pod" mesh still prices a
+        "node"/"cluster" spec).  Unmatched levels keep their datasheet
+        constants."""
+        links = list(links)
+        if not links:
+            return self
+        level_names = {l.name for l in self.levels}
+        by_name = {ln.level: ln for ln in links}
+        if not (set(by_name) & level_names):
+            by_name = {lvl.name: ln
+                       for lvl, ln in zip(self.levels, links)}
+        levels = tuple(
+            dataclasses.replace(l, alpha=by_name[l.name].alpha,
+                                bandwidth=by_name[l.name].bandwidth)
+            if l.name in by_name else l
+            for l in self.levels)
+        return dataclasses.replace(self, levels=levels)
+
     # -- sharding modes ------------------------------------------------------
 
     @property

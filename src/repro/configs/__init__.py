@@ -8,9 +8,9 @@ from repro.configs.base import (  # noqa: F401
     AUDIO, DENSE, HYBRID, MOE, SSM, VLM,
     DECODE_32K, LONG_500K, PREFILL_32K, TRAIN_4K, SHAPES,
     SINGLE_POD_MESH, MULTI_POD_MESH, DEVICE_PRESETS,
-    ILP_BACKENDS, SOLVERS,
-    DeviceInfo, MeshConfig, ModelConfig, OSDPConfig, RunConfig,
-    ShapeConfig, reduced,
+    ILP_BACKENDS, PRESET_CATALOG, PRESET_OVERLAP, SOLVERS,
+    DeviceInfo, DevicePreset, MeshConfig, ModelConfig, OSDPConfig,
+    RunConfig, ShapeConfig, reduced,
 )
 
 from repro.configs.arctic_480b import CONFIG as _arctic

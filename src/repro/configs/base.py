@@ -285,52 +285,68 @@ class DeviceInfo:
         launchers and benchmark CLIs).  `overlap` sets the comm/compute
         overlap factor: None keeps the serial model (0.0, the golden-
         pinned default), "auto" takes the preset's achievable value
-        from PRESET_OVERLAP, a float is used as-is."""
+        from the catalog, a float is used as-is."""
         try:
-            dev = cls(name=name, **_DEVICE_PRESETS[name])
+            dev = PRESET_CATALOG[name].info
         except KeyError:
             raise KeyError(
                 f"unknown device preset {name!r}; "
-                f"known: {sorted(_DEVICE_PRESETS)}") from None
+                f"known: {sorted(PRESET_CATALOG)}") from None
         if overlap is None:
             return dev
         if overlap == "auto":
-            overlap = PRESET_OVERLAP[name]
+            overlap = PRESET_CATALOG[name].achievable_overlap
         return dataclasses.replace(dev, overlap=float(overlap))
 
 
-# peak_flops are bf16 dense; mxu_efficiency is the sustained fraction
-# the cost model's gamma term uses (per-family empirical deratings)
-_DEVICE_PRESETS = {
-    "tpu-v5e": dict(
-        peak_flops=197e12, hbm_bytes=16 * 2**30, hbm_bw=819e9,
-        ici_bw=50e9, dci_bw=25e9, alpha=1e-6, mxu_efficiency=0.55),
-    "tpu-v4": dict(
-        peak_flops=275e12, hbm_bytes=32 * 2**30, hbm_bw=1228e9,
-        ici_bw=100e9, dci_bw=25e9, alpha=1e-6, mxu_efficiency=0.55),
-    "a100-80g": dict(
-        peak_flops=312e12, hbm_bytes=80 * 2**30, hbm_bw=2039e9,
-        ici_bw=300e9, dci_bw=25e9, alpha=5e-6, mxu_efficiency=0.45,
-        devices_per_node=8),
-    "h100-sxm": dict(
-        peak_flops=989e12, hbm_bytes=80 * 2**30, hbm_bw=3350e9,
-        ici_bw=450e9, dci_bw=50e9, alpha=5e-6, mxu_efficiency=0.45,
-        devices_per_node=8),
+@dataclass(frozen=True)
+class DevicePreset:
+    """One catalog entry: the datasheet DeviceInfo plus the per-preset
+    knobs that stay out of the serial cost model.  `achievable_overlap`
+    is what `--overlap auto` opts into (a bare `preset(name)` still
+    prices serially — committed goldens depend on it).  Measured
+    overrides do NOT live here: a fitted CalibrationProfile layers on
+    top via `repro.calibrate.store`, the single override point."""
+
+    info: "DeviceInfo"
+    achievable_overlap: float
+
+
+# The single source of per-device constants.  peak_flops are bf16
+# dense; mxu_efficiency is the sustained fraction the cost model's
+# gamma term uses (per-family empirical deratings) — the scalar a
+# fitted EfficiencyCurve replaces.  achievable_overlap: how much of a
+# collective the runtime's prefetched gathers / bucketed async
+# all-reduce can hide under compute on that interconnect.
+PRESET_CATALOG = {
+    "tpu-v5e": DevicePreset(DeviceInfo(
+        name="tpu-v5e", peak_flops=197e12, hbm_bytes=16 * 2**30,
+        hbm_bw=819e9, ici_bw=50e9, dci_bw=25e9, alpha=1e-6,
+        mxu_efficiency=0.55),
+        achievable_overlap=0.7),   # ICI schedules well behind the MXU
+    "tpu-v4": DevicePreset(DeviceInfo(
+        name="tpu-v4", peak_flops=275e12, hbm_bytes=32 * 2**30,
+        hbm_bw=1228e9, ici_bw=100e9, dci_bw=25e9, alpha=1e-6,
+        mxu_efficiency=0.55),
+        achievable_overlap=0.7),
+    "a100-80g": DevicePreset(DeviceInfo(
+        name="a100-80g", peak_flops=312e12, hbm_bytes=80 * 2**30,
+        hbm_bw=2039e9, ici_bw=300e9, dci_bw=25e9, alpha=5e-6,
+        mxu_efficiency=0.45, devices_per_node=8),
+        achievable_overlap=0.6),   # NCCL copy engines vs SM contention
+    "h100-sxm": DevicePreset(DeviceInfo(
+        name="h100-sxm", peak_flops=989e12, hbm_bytes=80 * 2**30,
+        hbm_bw=3350e9, ici_bw=450e9, dci_bw=50e9, alpha=5e-6,
+        mxu_efficiency=0.45, devices_per_node=8),
+        achievable_overlap=0.8),   # SHARP offload + faster NVLink
 }
 
-DEVICE_PRESETS = tuple(sorted(_DEVICE_PRESETS))
+DEVICE_PRESETS = tuple(sorted(PRESET_CATALOG))
 
-# achievable comm/compute overlap per preset, used by `--overlap auto`:
-# how much of a collective the runtime's prefetched gathers / bucketed
-# async all-reduce can hide under compute on that interconnect.  Kept
-# OUT of _DEVICE_PRESETS so a bare `preset(name)` still prices serially
-# (committed goldens depend on it).
-PRESET_OVERLAP = {
-    "tpu-v5e": 0.7,    # ICI collectives schedule well behind the MXU
-    "tpu-v4": 0.7,
-    "a100-80g": 0.6,   # NCCL copy engines vs SM contention
-    "h100-sxm": 0.8,   # SHARP offload + faster NVLink
-}
+# legacy view kept for callers that index the overlap table directly;
+# derived from the catalog so the constants live in exactly one place
+PRESET_OVERLAP = {name: p.achievable_overlap
+                  for name, p in PRESET_CATALOG.items()}
 
 
 # OSDPConfig.checkpointing value that promotes remat from a global

@@ -14,6 +14,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional, Sequence, Union
 
+from repro.calibrate.profile import CalibrationProfile
 from repro.cluster.topology import ClusterSpec
 from repro.configs.base import (DeviceInfo, MeshConfig, ModelConfig,
                                 OSDPConfig, RunConfig, ShapeConfig,
@@ -41,7 +42,8 @@ def osdp(model: ModelConfig,
          force_mode: Optional[str] = None,
          ilp_time_budget_s: float = 0.0,
          ilp_backend: str = "auto",
-         cluster: Optional["ClusterSpec"] = None) -> Plan:
+         cluster: Optional["ClusterSpec"] = None,
+         profile: Optional["CalibrationProfile"] = None) -> Plan:
     """Search the optimal sharded-data-parallel plan (paper Alg. 1).
 
     `search` picks the cover solver: "dfs" (paper Algorithm 1),
@@ -63,6 +65,11 @@ def osdp(model: ModelConfig,
     groups bound feasibility at the worst group.  Without one, the
     flat (device, mesh) model applies (mesh defaults to
     SINGLE_POD_MESH).
+
+    `profile` (a `repro.calibrate.CalibrationProfile`, from
+    `repro calibrate`) prices with measured constants — efficiency
+    curve, fitted link alpha/bandwidth, fitted recompute factor;
+    None keeps the scalar datasheet path byte-identical.
     """
     if mesh is None:
         mesh = (cluster.mesh_config() if cluster is not None
@@ -79,7 +86,7 @@ def osdp(model: ModelConfig,
         ilp_backend=ilp_backend,
     )
     run = RunConfig(model=model, shape=shape, mesh=mesh, osdp=cfg)
-    return make_plan(run, device, cluster=cluster)
+    return make_plan(run, device, cluster=cluster, profile=profile)
 
 
 def search_hybrid(model: Union[ModelConfig, ModelDescription],
@@ -101,6 +108,7 @@ def search_hybrid(model: Union[ModelConfig, ModelDescription],
                   batch_candidates: Optional[Sequence[int]] = None,
                   candidates: Optional[Sequence[Factorization]] = None,
                   cluster: Optional[ClusterSpec] = None,
+                  profile: Optional["CalibrationProfile"] = None,
                   ) -> HybridPlan:
     """Search the hybrid 3D(+OSDP) plan space (paper Fig. 5/6 rows).
 
@@ -148,7 +156,7 @@ def search_hybrid(model: Union[ModelConfig, ModelDescription],
         desc, dev, n_devices, cfg,
         batch_candidates=batch_candidates, micro=micro,
         candidates=candidates, max_tp=max_tp, max_pp=max_pp,
-        cluster=cluster)
+        cluster=cluster, profile=profile)
 
 
 def search_serve(model: ModelConfig,
@@ -168,7 +176,8 @@ def search_serve(model: ModelConfig,
                  max_slots: int = 512,
                  slot_candidates: Optional[Sequence[int]] = None,
                  cluster: Optional[ClusterSpec] = None,
-                 mix: Optional[RequestClassMix] = None) -> ServePlan:
+                 mix: Optional[RequestClassMix] = None,
+                 profile: Optional["CalibrationProfile"] = None) -> ServePlan:
     """Search the optimal serving configuration (inference OSDP).
 
     Same §3.1 trade as training — memory vs utilization per operator
@@ -205,7 +214,8 @@ def search_serve(model: ModelConfig,
     )
     env = CostEnv(device or (cluster.device if cluster is not None
                              else DeviceInfo()),
-                  mesh, checkpointing=False, train=False, cluster=cluster)
+                  mesh, checkpointing=False, train=False, cluster=cluster,
+                  profile=profile)
     workload = (mix if mix is not None
                 else ServingWorkload(prompt_len, decode_len))
     return _search.search_serve(
@@ -306,7 +316,8 @@ def evaluate_plan(model: Union[ModelConfig, ModelDescription],
                   device: Optional[DeviceInfo] = None,
                   checkpointing: bool = True,
                   train: bool = True,
-                  cluster: Optional[ClusterSpec] = None) -> PlanCost:
+                  cluster: Optional[ClusterSpec] = None,
+                  profile: Optional["CalibrationProfile"] = None) -> PlanCost:
     """Score an explicit plan through the vectorized PlanEvaluator.
 
     Same result as `cost_model.plan_cost` (to float-summation order),
@@ -331,7 +342,7 @@ def evaluate_plan(model: Union[ModelConfig, ModelDescription],
     env = CostEnv(device or (cluster.device if cluster is not None
                              else DeviceInfo()), mesh,
                   checkpointing=checkpointing, train=train,
-                  cluster=cluster)
+                  cluster=cluster, profile=profile)
     ev = PlanEvaluator.for_decisions(desc, env, decisions)
     modes = ev.modes_from_decisions(decisions)
     return ev.plan_cost(modes, global_batch or desc.shape.global_batch)

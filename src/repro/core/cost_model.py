@@ -38,6 +38,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.calibrate.profile import CalibrationProfile
 from repro.configs.base import DeviceInfo, MeshConfig
 from repro.cluster.topology import ClusterSpec
 from repro.core.descriptions import (ACT_BYTES, BYTES_PER_PARAM,
@@ -140,6 +141,12 @@ class CostEnv:
     # training = fwd + bwd (2x fwd) compute; False for serving estimates
     train: bool = True
     cluster: Optional[ClusterSpec] = None
+    # measured constants (repro calibrate): an efficiency curve in
+    # place of the scalar mxu_efficiency, fitted per-level alpha/bw in
+    # place of the datasheet link constants, a fitted recompute factor
+    # in place of the literal 1.30.  None keeps the legacy scalar path
+    # byte-identical — every committed golden is pinned on it.
+    profile: Optional["CalibrationProfile"] = None
 
     def __post_init__(self):
         if self.mesh is None:
@@ -151,10 +158,14 @@ class CostEnv:
     @cached_property
     def topo(self) -> ClusterSpec:
         """The hierarchical cluster spec all collectives are priced
-        against (the explicit `cluster`, else the depth-2 adapter)."""
-        if self.cluster is not None:
-            return self.cluster
-        return ClusterSpec.from_flat(self.device, self.mesh)
+        against (the explicit `cluster`, else the depth-2 adapter),
+        with fitted link constants substituted when a calibration
+        profile carries any."""
+        spec = (self.cluster if self.cluster is not None
+                else ClusterSpec.from_flat(self.device, self.mesh))
+        if self.profile is not None and self.profile.links:
+            spec = spec.with_links(self.profile.links)
+        return spec
 
     @property
     def n_data(self) -> int:
@@ -171,8 +182,40 @@ class CostEnv:
     @property
     def peak_compute(self) -> float:
         """FLOP/s the step can sustain: the slowest device group's
-        peak (uniform clusters: the device's), derated by efficiency."""
+        peak (uniform clusters: the device's), derated by efficiency.
+        This is the scalar (uncalibrated) derating; operator pricing
+        goes through `op_peak_compute` so a fitted curve can resolve
+        it per size."""
         return self.topo.effective_peak_flops * self.device.mxu_efficiency
+
+    def op_peak_compute(self, op_work: float) -> float:
+        """Sustained FLOP/s for one operator.  Without a profile this
+        is exactly `peak_compute` (legacy scalar path, byte-identical).
+        With one, the fitted curve is consulted at `op_work` — the
+        operator's per-TP-shard flops for ONE batch element
+        (`flops_per_token * seq / tp`), the batch-independent proxy
+        for its matmul size, so the PlanEvaluator's batch-linear
+        compute slopes survive calibration unchanged."""
+        if self.profile is None:
+            return self.peak_compute
+        frac = self.profile.efficiency.at(op_work)
+        return self.topo.effective_peak_flops * frac
+
+    @property
+    def remat_factor(self) -> float:
+        """Recompute multiplier on checkpointed compute: the model's
+        hand-set 1.30 (§4.3) unless a profile fitted one."""
+        return 1.30 if self.profile is None else self.profile.remat_factor
+
+    @property
+    def remat_compute_delta(self) -> float:
+        """The *extra* compute fraction remat adds (`remat_factor - 1`).
+        Kept as the literal 0.30 on the uncalibrated path: in floats
+        `1.30 - 1.0` is one ulp off 0.30 and the committed goldens pin
+        the literal."""
+        if self.profile is None:
+            return 0.30
+        return self.profile.remat_factor - 1.0
 
     @cached_property
     def overlaps(self) -> Tuple[float, ...]:
@@ -289,11 +332,13 @@ def op_cost(op: OperatorDesc, decision: Decision, batch_per_device: int,
         # working set is live (the layer-boundary checkpoints are counted
         # once in ModelDescription.resident_act_bytes_per_token)
         act /= max(1, op.layers)
-    compute = op.flops_per_token * tokens / tp / env.peak_compute
+    compute = op.flops_per_token * tokens / tp \
+        / env.op_peak_compute(op.flops_per_token * seq_len / tp)
     if env.train:
         compute *= 3.0            # fwd + bwd (2x fwd)
     if env.checkpointing:
-        compute *= 1.30           # the paper's ~30% recompute overhead
+        compute *= env.remat_factor   # ~30% recompute overhead (fitted
+        #                               when a calibration profile is on)
 
     # merge adjacent same-mode slices: the implementation stores them as
     # one array -> one collective (sharding.specs._merge_modes), so the
@@ -377,12 +422,15 @@ def _op_cost_per_slice(op: OperatorDesc, decision: Decision,
     param_bytes = op.param_bytes / tp
     tokens = batch_per_device * seq_len
     act_slice = op.act_bytes_per_token / tp * tokens / g
-    comp_slice = (op.flops_per_token * tokens / tp / env.peak_compute) / g
+    comp_slice = (op.flops_per_token * tokens / tp
+                  / env.op_peak_compute(op.flops_per_token * seq_len
+                                        / tp)) / g
     if env.train:
         comp_slice *= 3.0
     rl = op.eff_remat_layers
     states = decision.remat_states()
     bits = decision.remat_bits(env.checkpointing)
+    rf = env.remat_factor
 
     act = compute = 0.0
     for st, r in zip(states, bits):
@@ -393,7 +441,7 @@ def _op_cost_per_slice(op: OperatorDesc, decision: Decision,
             act += act_slice / rl
         else:
             act += act_slice
-        compute += comp_slice * (1.30 if r else 1.0)
+        compute += comp_slice * (rf if r else 1.0)
 
     runs: List[Tuple[str, List[int]]] = []
     for j, mode in enumerate(decision.modes):
@@ -602,14 +650,21 @@ class PlanEvaluator:
             [act / layers if env.checkpointing else act,   # inherit
              act,                                          # explicit off
              act / remat_layers], axis=1)                  # explicit on
+        # per-op sustained peak: the scalar derating, or the fitted
+        # curve at each op's size (elementwise divide keeps the legacy
+        # float order bit-identical when every entry is the scalar)
+        op_peak = np.array([env.op_peak_compute(op.flops_per_token
+                                                * seq / tp)
+                            for op in ops])
         comp = np.array([op.flops_per_token for op in ops]) * seq / tp \
-            / env.peak_compute / g
+            / op_peak / g
         if env.train:
             comp = comp * 3.0
+        rf = env.remat_factor
         comp_states = np.stack(
-            [comp * 1.30 if env.checkpointing else comp,
+            [comp * rf if env.checkpointing else comp,
              comp,
-             comp * 1.30], axis=1)
+             comp * rf], axis=1)
 
         # per-op per-extended-mode tables; e = mode + n_modes * state.
         # Collective prices iterate the spec's per-level rings in the
@@ -1008,12 +1063,14 @@ def remat_act_saving_slope(op: OperatorDesc, env: CostEnv, seq_len: int,
 def remat_compute_slope(op: OperatorDesc, env: CostEnv, seq_len: int,
                         split: int = 1) -> float:
     """Recompute seconds ONE remat'd slice adds, per unit of per-device
-    batch: 30% of the slice's (train) compute."""
+    batch: the recompute fraction (30%, or the fitted factor minus 1)
+    of the slice's (train) compute."""
     comp = (op.flops_per_token * seq_len / env.n_tp
-            / env.peak_compute) / max(1, split)
+            / env.op_peak_compute(op.flops_per_token * seq_len
+                                  / env.n_tp)) / max(1, split)
     if env.train:
         comp *= 3.0
-    return 0.30 * comp
+    return env.remat_compute_delta * comp
 
 
 # ---------------------------------------------------------------------------

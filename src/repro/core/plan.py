@@ -67,12 +67,14 @@ def remat_summary(decisions: Dict[str, Decision], osdp) -> str:
 
 def make_plan(run: RunConfig,
               device: Optional[DeviceInfo] = None,
-              cluster=None) -> Plan:
+              cluster=None, profile=None) -> Plan:
     """Run the OSDP pipeline for a RunConfig with a fixed global batch.
 
     `cluster` (a `repro.cluster.ClusterSpec`) prices collectives
     against the real bandwidth hierarchy; without one the flat
-    (device, mesh) depth-2 adapter applies."""
+    (device, mesh) depth-2 adapter applies.  `profile` (a
+    `repro.calibrate.CalibrationProfile`) prices with measured
+    constants; None keeps the scalar path byte-identical."""
     device = device or (cluster.device if cluster is not None
                         else DeviceInfo())
     desc = describe(run.model, run.shape)
@@ -81,7 +83,7 @@ def make_plan(run: RunConfig,
     env = CostEnv(device, run.mesh,
                   checkpointing=run.osdp.env_checkpointing,
                   train=(run.shape.kind == "train"),
-                  cluster=cluster)
+                  cluster=cluster, profile=profile)
     if not run.osdp.enabled:
         decisions = uniform_plan(desc, DP)
         cost = plan_cost(desc, decisions, run.shape.global_batch, env)

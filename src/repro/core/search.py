@@ -1571,7 +1571,8 @@ def search_hybrid(desc: ModelDescription, device: DeviceInfo,
                   micro: int = 8,
                   candidates: Optional[Sequence[Factorization]] = None,
                   max_tp: int = 0, max_pp: int = 0,
-                  cluster: Optional[ClusterSpec] = None) -> HybridPlan:
+                  cluster: Optional[ClusterSpec] = None,
+                  profile=None) -> HybridPlan:
     """The paper's strongest configuration, "3D+OSDP", as a search.
 
     Sweeps every (dp, tp, pp) factorization of `n_devices` (or the
@@ -1639,8 +1640,17 @@ def search_hybrid(desc: ModelDescription, device: DeviceInfo,
     # a fully-no-remat plan is reachable, so 1.0x stays admissible).
     # Heterogeneous fleets run lockstep at the slowest group's pace.
     flops_tok = sum(op.flops_per_token for op in desc.operators)
-    comp_unit = seq * 3.0 * (1.30 if osdp.env_checkpointing else 1.0) \
-        / (topo.effective_peak_flops * device.mxu_efficiency)
+    if profile is None:
+        comp_unit = seq * 3.0 * (1.30 if osdp.env_checkpointing else 1.0) \
+            / (topo.effective_peak_flops * device.mxu_efficiency)
+    else:
+        # calibrated bound stays admissible: no op runs above the
+        # curve's best fraction, and every op pays >= the fitted
+        # recompute factor when checkpointing is forced on
+        eff_hi = max(profile.efficiency.fraction)
+        rf = profile.remat_factor if osdp.env_checkpointing else 1.0
+        comp_unit = seq * 3.0 * rf \
+            / (topo.effective_peak_flops * eff_hi)
 
     def thr_bound(f: Factorization) -> float:
         best_b = 0.0
@@ -1680,7 +1690,8 @@ def search_hybrid(desc: ModelDescription, device: DeviceInfo,
         data_spec = residues[f]
         env = CostEnv(device, MeshConfig((f.dp, 1), ("data", "model")),
                       checkpointing=osdp.env_checkpointing,
-                      include_tp=False, cluster=data_spec)
+                      include_tp=False, cluster=data_spec,
+                      profile=profile)
         local: Optional[HybridPlan] = None
         for vi, cfg in enumerate(variants):
             key = (mp, data_spec, vi)

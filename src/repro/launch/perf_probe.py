@@ -66,6 +66,32 @@ def measure_level_bandwidth(mesh, size_mib: float = 4.0,
     return out
 
 
+def bandwidth_sweep(mesh, sizes_mib=(0.25, 1.0, 4.0, 16.0),
+                    repeats: int = 3) -> dict:
+    """`measure_level_bandwidth` swept over message sizes, with a
+    per-axis alpha-beta fit: ``t(B) = alpha + B / bandwidth``.  The
+    fitted constants are what `repro calibrate` ships as per-level
+    `LinkCalibration`s; span-1 axes report ``fit: None``.  Returns
+    ``{axis: {"samples": [(bytes, seconds), ...], "fit": {"alpha":
+    s, "bandwidth": bytes/s} | None}}``."""
+    from repro.calibrate.fit import fit_alpha_beta
+
+    out = {str(a): {"samples": [], "fit": None}
+           for a in mesh.axis_names}
+    for mib in sizes_mib:
+        rec = measure_level_bandwidth(mesh, size_mib=mib,
+                                      repeats=repeats)
+        for axis, row in rec.items():
+            if row["bytes_moved"] > 0:
+                out[str(axis)]["samples"].append(
+                    (row["bytes_moved"], row["seconds"]))
+    for axis, row in out.items():
+        if len({b for b, _ in row["samples"]}) >= 2:
+            alpha, bw = fit_alpha_beta(row["samples"])
+            row["fit"] = {"alpha": alpha, "bandwidth": bw}
+    return out
+
+
 def overlap_sanity(measured: dict, device_name: str,
                    n_devices: int) -> list:
     """Pair measured per-axis bandwidth with the preset ClusterSpec's
@@ -109,6 +135,10 @@ def main(argv=None) -> int:
                     help="time an all-gather per mesh axis (achieved "
                          "per-level bandwidth)")
     ap.add_argument("--bw-mib", type=float, default=4.0)
+    ap.add_argument("--bw-sweep", action="store_true",
+                    help="sweep message sizes per axis and fit "
+                         "alpha-beta link constants (the collective "
+                         "half of `repro calibrate`)")
     ap.add_argument("--device", default=None,
                     help="DeviceInfo preset to compare measured "
                          "bandwidth against (overlap sanity check)")
@@ -214,6 +244,8 @@ def main(argv=None) -> int:
             if args.device:
                 rec["overlap_sanity"] = overlap_sanity(
                     measured, args.device, mesh.size)
+        if args.bw_sweep:
+            rec["bandwidth_sweep"] = bandwidth_sweep(mesh)
     if args.dump_hlo:
         with open(args.dump_hlo, "w") as f:
             f.write(txt)

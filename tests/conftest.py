@@ -29,9 +29,11 @@ from repro.configs import (MeshConfig, OSDPConfig, RunConfig, get_arch,
 #   test_ilp.py          — pinned ONLY when scipy is absent: the
 #                          milp-backend cases skip; the bnb cases and
 #                          everything else in the module still run
-# test_overlap.py and test_perf_probe.py are deliberately NOT listed:
-# the overlap timeline/runtime tests and the probe subprocess tests
-# run everywhere (single-device CPU suffices) and must never skip.
+# test_overlap.py, test_perf_probe.py, test_calibrate.py and
+# test_roofline.py are deliberately NOT listed: the overlap
+# timeline/runtime tests, the probe subprocess tests, the calibration
+# fit/equivalence tests and the HLO-parser pins run everywhere
+# (single-device CPU suffices) and must never skip.
 EXPECTED_SKIP_MODULES = frozenset({
     "test_kernels.py",
     "test_distributed.py",

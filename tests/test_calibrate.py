@@ -1,0 +1,424 @@
+"""Calibration subsystem tests (ISSUE 10).
+
+Four pinned contracts:
+
+  * the fits recover known constants from synthetic timings and
+    enforce their clamps (monotone curve, alpha >= 0, remat in
+    [1, 2]);
+  * `CalibrationProfile` JSON round-trips to an identical value;
+  * `profile=None` and the degenerate `default_profile(device)` price
+    every random plan identically to 1e-12 relative, across models
+    and cluster shapes — calibration off is byte-equivalent to the
+    legacy scalar path;
+  * the preset catalog is self-consistent (one source of truth) and
+    the committed fig5/fig9 goldens re-assert unmoved with
+    calibration disabled.
+"""
+import dataclasses
+import json
+import math
+import random
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.calibrate import fit, store
+from repro.calibrate.profile import (CalibrationProfile, EfficiencyCurve,
+                                     LinkCalibration, default_profile)
+from repro.configs import (DEVICE_PRESETS, DeviceInfo, MeshConfig,
+                           MULTI_POD_MESH, PRESET_CATALOG, PRESET_OVERLAP,
+                           SINGLE_POD_MESH, get_arch, get_shape)
+from repro.core.cost_model import (DP, CostEnv, Decision, plan_cost,
+                                   uniform_plan, ZDP)
+from repro.core.descriptions import describe
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+# ---------------------------------------------------------------------------
+# fits recover known constants
+# ---------------------------------------------------------------------------
+
+def test_alpha_beta_fit_recovers_known_constants():
+    alpha, bw = 2.5e-5, 3.2e9
+    samples = [(b, alpha + b / bw)
+               for b in (1e5, 1e6, 4e6, 1.6e7, 6.4e7)]
+    a, w = fit.fit_alpha_beta(samples)
+    assert a == pytest.approx(alpha, rel=1e-9)
+    assert w == pytest.approx(bw, rel=1e-9)
+
+
+def test_alpha_beta_fit_clamps_negative_intercept():
+    # pure-bandwidth samples perturbed so the LSQ intercept dips
+    # negative: alpha must clamp to 0 and the slope refit stays sane
+    bw = 1e9
+    samples = [(1e6, 1e6 / bw * 0.95), (1e7, 1e7 / bw),
+               (1e8, 1e8 / bw * 1.01)]
+    a, w = fit.fit_alpha_beta(samples)
+    assert a == 0.0
+    assert w == pytest.approx(bw, rel=0.05)
+
+
+def test_alpha_beta_fit_latency_dominated_fallback():
+    # constant time regardless of size: slope <= 0, bandwidth falls
+    # back to the best single-sample bound instead of going negative
+    a, w = fit.fit_alpha_beta([(1e6, 1e-3), (1e7, 1e-3), (1e8, 1e-3)])
+    assert a >= 0.0 and w > 0.0
+
+
+def test_alpha_beta_fit_rejects_degenerate_input():
+    with pytest.raises(ValueError):
+        fit.fit_alpha_beta([(1e6, 1e-3)])
+    with pytest.raises(ValueError):
+        fit.fit_alpha_beta([(1e6, 1e-3), (1e6, 2e-3)])
+    with pytest.raises(ValueError):
+        fit.fit_alpha_beta([(1e6, 1e-3), (1e7, -1.0)])
+
+
+def test_efficiency_fit_recovers_known_curve():
+    peak = 1e12
+    sizes = [2 * n ** 3 for n in (64, 128, 256, 512)]
+    fracs = [0.05, 0.2, 0.6, 0.9]
+    samples = [(s, s / (f * peak)) for s, f in zip(sizes, fracs)]
+    curve = fit.fit_efficiency_curve(samples, peak_flops=peak)
+    for s, f in zip(sizes, fracs):
+        assert curve.at(s) == pytest.approx(f, rel=1e-9)
+
+
+def test_efficiency_fit_is_monotone_and_clipped():
+    peak = 1e12
+    # non-monotone noise + one sample "above peak" (fraction > 1)
+    samples = [(1e6, 1e6 / (0.3 * peak)), (1e7, 1e7 / (0.1 * peak)),
+               (1e8, 1e8 / (1.4 * peak))]
+    curve = fit.fit_efficiency_curve(samples, peak_flops=peak)
+    assert all(b >= a for a, b in zip(curve.fraction, curve.fraction[1:]))
+    assert all(0.0 < f <= 1.0 for f in curve.fraction)
+    # queries between/outside knots stay monotone and clamped
+    last = 0.0
+    for flops in (1e5, 1e6, 3e6, 1e7, 5e7, 1e8, 1e9):
+        f = curve.at(flops)
+        assert last <= f <= 1.0
+        last = f
+
+
+def test_efficiency_fit_averages_duplicate_sizes():
+    peak = 1e12
+    # same size measured twice: fractions 0.2 and 0.4 average to 0.3
+    samples = [(1e6, 1e6 / (0.2 * peak)), (1e6, 1e6 / (0.4 * peak))]
+    curve = fit.fit_efficiency_curve(samples, peak_flops=peak)
+    assert len(curve.fraction) == 1
+    assert curve.at(1e6) == pytest.approx(0.3, rel=1e-9)
+
+
+def test_remat_fit_recovers_and_clamps():
+    assert fit.fit_remat_factor(1.0, 1.37) == pytest.approx(1.37)
+    assert fit.fit_remat_factor(1.0, 0.9) == 1.0     # noise below 1
+    assert fit.fit_remat_factor(1.0, 2.8) == 2.0     # clamp at hi
+    with pytest.raises(ValueError):
+        fit.fit_remat_factor(0.0, 1.0)
+
+
+def test_link_fit_skips_span_one_axes():
+    sweeps = {"data": [(1e6, 1e-3), (4e6, 3e-3)],
+              "model": []}          # span-1 axis: no bytes moved
+    links = fit.fit_link_calibrations(sweeps)
+    assert [ln.level for ln in links] == ["data"]
+    assert links[0].alpha >= 0 and links[0].bandwidth > 0
+
+
+# ---------------------------------------------------------------------------
+# value-type semantics + validation
+# ---------------------------------------------------------------------------
+
+def test_curve_interpolates_in_log_space_and_clamps():
+    curve = EfficiencyCurve((6.0, 8.0), (0.2, 0.8))
+    assert curve.at(1e5) == 0.2          # below range: clamp
+    assert curve.at(1e9) == 0.8          # above range: clamp
+    assert curve.at(1e7) == pytest.approx(0.5)   # log-midpoint
+    assert curve.at(0.0) == 0.2          # degenerate query
+    const = EfficiencyCurve.constant(0.55)
+    for flops in (0.0, 1e3, 1e15):
+        assert const.at(flops) == 0.55
+
+
+def test_curve_validation_errors():
+    with pytest.raises(ValueError):
+        EfficiencyCurve((1.0, 2.0), (0.5,))          # length mismatch
+    with pytest.raises(ValueError):
+        EfficiencyCurve((), ())                      # empty
+    with pytest.raises(ValueError):
+        EfficiencyCurve((2.0, 1.0), (0.1, 0.2))      # knots not increasing
+    with pytest.raises(ValueError):
+        EfficiencyCurve((1.0, 2.0), (0.5, 0.4))      # fractions decreasing
+    with pytest.raises(ValueError):
+        EfficiencyCurve((1.0,), (1.5,))              # fraction > 1
+    with pytest.raises(ValueError):
+        EfficiencyCurve((1.0,), (0.0,))              # fraction = 0
+
+
+def test_link_and_profile_validation_errors():
+    with pytest.raises(ValueError):
+        LinkCalibration("data", -1e-6, 1e9)
+    with pytest.raises(ValueError):
+        LinkCalibration("data", 0.0, 0.0)
+    curve = EfficiencyCurve.constant(0.5)
+    with pytest.raises(ValueError):
+        CalibrationProfile("d", curve, remat_factor=0.5)
+    with pytest.raises(ValueError):
+        CalibrationProfile("d", curve, links=(
+            LinkCalibration("data", 0.0, 1e9),
+            LinkCalibration("data", 0.0, 2e9)))
+
+
+def test_profile_json_round_trip_identity(tmp_path):
+    profile = CalibrationProfile(
+        device="host-cpu",
+        efficiency=EfficiencyCurve((5.7, 7.5, 9.3), (0.04, 0.5, 1.0)),
+        links=(LinkCalibration("data", 1.5e-4, 9.4e8),
+               LinkCalibration("pod", 2.5e-3, 1.2e8)),
+        remat_factor=1.26, peak_flops=8.9e10, source="unit test")
+    assert CalibrationProfile.from_json(profile.to_json()) == profile
+    path = tmp_path / "profile.json"
+    profile.save(path)
+    assert CalibrationProfile.load(path) == profile
+    # the on-disk form is plain JSON with stable keys
+    doc = json.loads(path.read_text())
+    assert doc["device"] == "host-cpu"
+    assert doc["efficiency"]["fraction"] == [0.04, 0.5, 1.0]
+
+
+def test_profile_from_dict_defaults():
+    p = CalibrationProfile.from_dict({
+        "device": "x",
+        "efficiency": {"log10_flops": [1.0], "fraction": [0.5]}})
+    assert p.links == () and p.remat_factor == 1.30
+    assert p.peak_flops is None and p.source == ""
+
+
+# ---------------------------------------------------------------------------
+# profile=None is byte-equivalent to the degenerate default profile
+# ---------------------------------------------------------------------------
+
+EQUIV_MODELS = ("qwen1.5-0.5b", "phi4-mini-3.8b", "mamba2-2.7b")
+EQUIV_MESHES = {
+    "single_pod": SINGLE_POD_MESH,
+    "multi_pod": MULTI_POD_MESH,
+    "narrow": MeshConfig((8, 1), ("data", "model")),
+}
+
+
+def _random_plan(desc, rng, modes):
+    decs = {}
+    for op in desc.operators:
+        if not op.decidable:
+            decs[op.name] = Decision(op.name, (DP,))
+            continue
+        g = rng.choice([1, 2, 4]) if op.splittable else 1
+        remat = tuple(rng.choice([None, True, False]) for _ in range(g))
+        decs[op.name] = Decision(
+            op.name, tuple(rng.choice(modes) for _ in range(g)),
+            remat=remat)
+    return decs
+
+
+@pytest.mark.parametrize("model", EQUIV_MODELS)
+@pytest.mark.parametrize("mesh_name", sorted(EQUIV_MESHES))
+def test_no_profile_equals_default_profile(model, mesh_name):
+    mesh = EQUIV_MESHES[mesh_name]
+    device = DeviceInfo()
+    desc = describe(get_arch(model), get_shape("train_4k"))
+    env0 = CostEnv(device, mesh)
+    env1 = CostEnv(device, mesh, profile=default_profile(device))
+    modes = ("DP", "ZDP", "ZDP_POD") if mesh.multi_pod else ("DP", "ZDP")
+    rng = random.Random(hash((model, mesh_name)) & 0xFFFF)
+    plans = [uniform_plan(desc, DP), uniform_plan(desc, ZDP)] + \
+        [_random_plan(desc, rng, modes) for _ in range(3)]
+    for i, decs in enumerate(plans):
+        for batch in (16, 512):
+            got = plan_cost(desc, decs, batch, env1)
+            want = plan_cost(desc, decs, batch, env0)
+            for f in ("memory", "peak_memory", "time", "comm_time",
+                      "compute_time", "throughput"):
+                g, w = getattr(got, f), getattr(want, f)
+                assert g == pytest.approx(w, rel=1e-12, abs=1e-15), \
+                    (model, mesh_name, i, batch, f, g, w)
+
+
+def test_no_profile_scalar_identities():
+    env = CostEnv(DeviceInfo(), SINGLE_POD_MESH)
+    # without a profile the per-op hooks are EXACTLY the scalar path:
+    # the goldens pin these floats bit-for-bit
+    for work in (1.0, 1e6, 1e12):
+        assert env.op_peak_compute(work) == env.peak_compute
+    assert env.remat_factor == 1.30
+    assert env.remat_compute_delta == 0.30   # the literal, not 1.30-1.0
+
+
+# ---------------------------------------------------------------------------
+# preset catalog: one source of truth
+# ---------------------------------------------------------------------------
+
+def test_preset_catalog_is_single_source():
+    assert DEVICE_PRESETS == tuple(sorted(PRESET_CATALOG))
+    assert set(PRESET_OVERLAP) == set(PRESET_CATALOG)
+    for name, preset in PRESET_CATALOG.items():
+        assert preset.info.name == name
+        assert PRESET_OVERLAP[name] == preset.achievable_overlap
+        assert DeviceInfo.preset(name) == preset.info
+        auto = DeviceInfo.preset(name, overlap="auto")
+        assert auto.overlap == preset.achievable_overlap
+
+
+def test_preset_unknown_name_raises():
+    with pytest.raises(KeyError):
+        DeviceInfo.preset("not-a-device")
+    with pytest.raises(KeyError):
+        store.catalog_default("not-a-device")
+
+
+def test_store_resolves_registered_over_catalog(tmp_path):
+    store.clear()
+    try:
+        name = DEVICE_PRESETS[0]
+        assert store.resolve(name) == default_profile(
+            DeviceInfo.preset(name))
+        fitted = CalibrationProfile(
+            device=name, efficiency=EfficiencyCurve.constant(0.9),
+            remat_factor=1.1, source="fitted")
+        store.register(fitted)
+        assert store.resolve(name) == fitted
+        assert store.registered_names() == (name,)
+        # load_and_register round-trips through the CLI's on-disk form
+        path = tmp_path / "p.json"
+        fitted2 = dataclasses.replace(fitted, device="other")
+        fitted2.save(path)
+        assert store.load_and_register(path) == fitted2
+        assert store.resolve("other") == fitted2
+    finally:
+        store.clear()
+
+
+# ---------------------------------------------------------------------------
+# calibrated behavior: the fitted constants actually reprice
+# ---------------------------------------------------------------------------
+
+def _host_profile(alpha=1e-4, bw=1e9, remat=1.5):
+    return CalibrationProfile(
+        device="host", efficiency=EfficiencyCurve((6.0, 9.0), (0.1, 1.0)),
+        links=(LinkCalibration("data", alpha, bw),), remat_factor=remat)
+
+
+def test_fitted_links_reprice_collectives():
+    device = DeviceInfo()
+    desc = describe(get_arch("qwen1.5-0.5b"), get_shape("train_4k"))
+    env0 = CostEnv(device, SINGLE_POD_MESH)
+    slow = CostEnv(device, SINGLE_POD_MESH,
+                   profile=_host_profile(alpha=1e-3, bw=device.ici_bw / 50))
+    plan = uniform_plan(desc, ZDP)
+    t0 = plan_cost(desc, plan, 64, env0).comm_time
+    t1 = plan_cost(desc, plan, 64, slow).comm_time
+    assert t1 > t0 * 10    # 50x slower link + huge alpha must show up
+    # the link landed on the innermost ("data") level of the topo
+    lvl = slow.topo.levels[0]
+    assert lvl.alpha == 1e-3
+    assert lvl.bandwidth == device.ici_bw / 50
+
+
+def test_fitted_links_bind_positionally_when_names_differ():
+    from repro.cluster.topology import ClusterSpec
+    spec = ClusterSpec.from_device(
+        dataclasses.replace(DeviceInfo(), devices_per_node=8), 64)
+    names = [l.name for l in spec.levels]
+    assert "data" not in names     # the interesting case: no name match
+    repriced = spec.with_links([LinkCalibration("data", 7e-5, 3e9)])
+    assert repriced.levels[0].alpha == 7e-5
+    assert repriced.levels[0].bandwidth == 3e9
+    # outer level untouched
+    assert repriced.levels[1].alpha == spec.levels[1].alpha
+
+
+def test_efficiency_curve_reprices_compute_by_op_size():
+    env = CostEnv(DeviceInfo(), SINGLE_POD_MESH,
+                  profile=_host_profile())
+    # small ops run at the low end of the curve, big ops at the top;
+    # sustained flops must be monotone in op size
+    peaks = [env.op_peak_compute(w) for w in (1e5, 1e7, 1e9, 1e11)]
+    assert all(b >= a for a, b in zip(peaks, peaks[1:]))
+    assert peaks[0] == pytest.approx(
+        env.topo.effective_peak_flops * 0.1)
+    assert peaks[-1] == pytest.approx(env.topo.effective_peak_flops)
+    assert env.remat_factor == 1.5
+    assert env.remat_compute_delta == pytest.approx(0.5)
+
+
+def test_search_accepts_profile():
+    from repro.core.search import schedule
+    from repro.configs import OSDPConfig
+    desc = describe(get_arch("qwen1.5-0.5b"), get_shape("train_4k"))
+    env = CostEnv(DeviceInfo(), SINGLE_POD_MESH,
+                  profile=_host_profile())
+    dp_mem = plan_cost(desc, uniform_plan(desc, DP), 8,
+                       CostEnv(DeviceInfo(), SINGLE_POD_MESH)).memory
+    osdp = OSDPConfig(enabled=True, memory_limit_bytes=dp_mem * 0.6)
+    res = schedule(desc, env, osdp, batch_candidates=[4, 8])
+    assert res.feasible
+    assert res.cost.memory <= dp_mem * 0.6
+
+
+# ---------------------------------------------------------------------------
+# goldens unmoved with calibration disabled
+# ---------------------------------------------------------------------------
+
+def _bench(name):
+    sys.path.insert(0, str(ROOT))
+    try:
+        import importlib
+        return importlib.import_module(f"benchmarks.{name}")
+    finally:
+        sys.path.pop(0)
+
+
+def test_fig5_golden_unmoved():
+    """fig5 --quick asserts its 8-GiB block against the committed
+    golden internally; a profile registered in the store must not
+    leak into the default (profile=None) pricing path."""
+    fig5 = _bench("fig5_end_to_end")
+    store.register(_host_profile())
+    try:
+        rows = fig5.main(out=lambda *a, **k: None, quick=True)
+    finally:
+        store.clear()
+    assert rows
+
+
+def test_fig9_golden_unmoved():
+    fig9 = _bench("fig9_checkpointing")
+    rows = fig9.main(out=lambda *a, **k: None, quick=True)
+    assert rows
+
+
+def test_bench_quick_rows_resolve_identically():
+    """Re-solve the committed BENCH quick training rows (dfs solver)
+    with calibration disabled: step times, feasibility and solver
+    effort must be byte-identical to the committed JSON."""
+    from repro.configs import OSDPConfig
+    from repro.core.search import search_plan
+    st = _bench("search_time")
+    doc = json.loads((ROOT / "BENCH_search.json").read_text())
+    checked = 0
+    for name, desc, env, lim, batch, ckpt in st._search_plan_cases(
+            quick=True):
+        want = doc["current"].get(name, {}).get("solvers", {}).get("dfs")
+        if want is None:
+            continue
+        osdp = OSDPConfig(search="dfs", memory_limit_bytes=lim,
+                          operator_splitting=True,
+                          default_slice_granularity=4,
+                          checkpointing=ckpt)
+        res = search_plan(desc, batch, env, osdp)
+        assert round(res.cost.time * 1e3, 3) == want["step_time_ms"], name
+        assert res.feasible == want["feasible"], name
+        assert res.nodes_visited == want["nodes_visited"], name
+        checked += 1
+    assert checked >= 2
